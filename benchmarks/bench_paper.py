@@ -1,0 +1,160 @@
+"""Paper-table benchmarks (Tables 2-5, Figs 3-4, Fig 6 cost model).
+
+Each function returns a list of CSV rows (name, us_per_call, derived).
+Scaled to N=20k on this CPU container; same code paths as billion-scale
+(DESIGN.md §7 scale note).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.index_io import HostIndex, recall_at
+from repro.core.index_switch import IndexManager
+
+
+def _search_stats(idx, q, gt, L, k=10):
+    ids, stats = idx.search_batch(q, k, L=L)
+    lat = np.mean([s.latency_s for s in stats])
+    return (recall_at(ids, gt, 1), recall_at(ids, gt, 10), lat,
+            np.mean([s.ios for s in stats]),
+            np.mean([s.bytes_read for s in stats]))
+
+
+def table2_memory():
+    """Table 2: resident memory, DiskANN vs AiSAQ (same index family)."""
+    paths = C.ensure_indices()
+    rows = []
+    res = {}
+    for mode in ("diskann", "aisaq"):
+        idx = HostIndex.load(paths[(mode, C.DEFAULT_M)])
+        res[mode] = idx.resident_bytes()
+        rows.append((f"table2_resident_{mode}", res[mode] / 1e3,
+                     f"KB_mode={mode}"))
+        idx.close()
+    rows.append(("table2_ratio", res["diskann"] / res["aisaq"],
+                 "diskann_over_aisaq"))
+    return rows
+
+
+def table3_load_time():
+    paths = C.ensure_indices()
+    rows = []
+    for mode in ("diskann", "aisaq"):
+        ts = []
+        for _ in range(5):
+            idx = HostIndex.load(paths[(mode, C.DEFAULT_M)])
+            ts.append(idx.load_time_s)
+            idx.close()
+        rows.append((f"table3_load_{mode}", np.median(ts) * 1e6,
+                     f"ms={np.median(ts)*1e3:.2f}"))
+    return rows
+
+
+def table4_switch_time():
+    paths = C.ensure_subcorpora()
+    rows = []
+    # with centroid reloading
+    mgr = IndexManager(paths)
+    mgr.switch("sub0", share_centroids=False)
+    ts = [mgr.switch(f"sub{i}", share_centroids=False) for i in (1, 2, 3, 4)]
+    rows.append(("table4_switch_reload", np.median(ts) * 1e6,
+                 f"ms={np.median(ts)*1e3:.3f}"))
+    mgr.close()
+    # shared centroids (paper: only ~4KB metadata moves)
+    mgr = IndexManager(paths)
+    mgr.switch("sub0")
+    ts = [mgr.switch(f"sub{i}") for i in (1, 2, 3, 4)]
+    rows.append(("table4_switch_shared", np.median(ts) * 1e6,
+                 f"ms={np.median(ts)*1e3:.3f}"))
+    mgr.close()
+    # diskann-mode switch for contrast
+    dp = C.ensure_indices()
+    mgr = IndexManager({"a": dp[("diskann", C.DEFAULT_M)],
+                        "b": dp[("aisaq", C.DEFAULT_M)]})
+    mgr.switch("b")
+    t = mgr.switch("a", share_centroids=False)
+    rows.append(("table4_switch_diskann", t * 1e6, f"ms={t*1e3:.3f}"))
+    mgr.close()
+    return rows
+
+
+def fig3_recall_latency():
+    base, q, gt = C.corpus()
+    paths = C.ensure_indices()
+    rows = []
+    for mode in ("diskann", "aisaq"):
+        idx = HostIndex.load(paths[(mode, C.DEFAULT_M)])
+        for L in (10, 20, 40, 80):
+            r1, r10, lat, ios, rb = _search_stats(idx, q, gt, L)
+            rows.append((f"fig3_{mode}_L{L}", lat * 1e6,
+                         f"recall1={r1:.3f}_recall10={r10:.3f}_ios={ios:.0f}"))
+        idx.close()
+    return rows
+
+
+def fig4_memory_latency():
+    """Fig 4: latency@recall>=0.95 vs resident memory across b_pq."""
+    base, q, gt = C.corpus()
+    paths = C.ensure_indices(ms=C.PQ_MS)
+    rows = []
+    for mode in ("diskann", "aisaq"):
+        for m in C.PQ_MS:
+            idx = HostIndex.load(paths[(mode, m)])
+            best = None
+            for L in (10, 20, 40, 80, 120):
+                r1, _, lat, _, _ = _search_stats(idx, q, gt, L)
+                if r1 >= 0.95:
+                    best = (lat, L, r1)
+                    break
+            if best is None:
+                best = (lat, L, r1)
+            rows.append((f"fig4_{mode}_m{m}", best[0] * 1e6,
+                         f"residentKB={idx.resident_bytes()/1e3:.0f}"
+                         f"_L={best[1]}_recall1={best[2]:.3f}"))
+            idx.close()
+    return rows
+
+
+def table5_multiserver(n_servers: int = 6):
+    """Table 5: n search servers over one corpus; Fig 6 cost model."""
+    paths = C.ensure_indices()
+    rows = []
+    for mode in ("diskann", "aisaq"):
+        idxs, loads = [], []
+        for s in range(n_servers):
+            idx = HostIndex.load(paths[(mode, C.DEFAULT_M)])
+            loads.append(idx.load_time_s)
+            idxs.append(idx)
+        total_res = sum(i.resident_bytes() for i in idxs)
+        rows.append((f"table5_total_resident_{mode}", total_res / 1e3,
+                     f"KB_servers={n_servers}"))
+        rows.append((f"table5_avg_load_{mode}", np.mean(loads) * 1e6,
+                     f"ms={np.mean(loads)*1e3:.2f}"))
+        for i in idxs:
+            i.close()
+    # Fig 6 cost model at SIFT1B scale (paper constants):
+    # DRAM $1.8/GB, SSD $0.054/GB; R=52, b_pq=32, N=1e9
+    dram, ssd = 1.8, 0.054
+    N, bpq, Rdeg, bfull, bnum = 1e9, 32, 52, 128, 4
+    disk_ssd_gb = N * (bfull + bnum * (Rdeg + 1)) / 1e9
+    ais_ssd_gb = N * (bfull + bnum * (Rdeg + 1) + Rdeg * bpq) / 1e9
+    for n in (1, 2, 4, 6):
+        cost_d = n * (N * bpq / 1e9) * dram + disk_ssd_gb * ssd
+        cost_a = 0.011 * n * dram + ais_ssd_gb * ssd
+        rows.append((f"fig6_cost_n{n}", cost_a, f"aisaq${cost_a:.0f}_"
+                     f"diskann${cost_d:.0f}_crossover={cost_a < cost_d}"))
+    return rows
+
+
+def all_benchmarks():
+    rows = []
+    for fn in (table2_memory, table3_load_time, table4_switch_time,
+               fig3_recall_latency, fig4_memory_latency, table5_multiserver):
+        t0 = time.time()
+        rows += fn()
+        print(f"[bench] {fn.__name__} done in {time.time()-t0:.0f}s",
+              flush=True)
+    return rows

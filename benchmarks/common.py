@@ -1,0 +1,107 @@
+"""Shared benchmark fixtures: one cached corpus + index family.
+
+The Vamana graph is built ONCE and shared across all PQ sizes and both
+placement modes (the paper does the same: same graph topology, different
+placement/compression), so the full Fig-3/Fig-4/Table-2/3/4 suite needs a
+single graph build.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+IDX = os.path.join(ART, "bench_idx")
+
+N, DIM, NQ = 20000, 96, 64
+R, BUILD_L = 24, 40
+PQ_MS = (12, 24, 48, 96)          # b_pq sweep for Fig. 4
+DEFAULT_M = 48
+
+
+def corpus():
+    from repro.data.vectors import make_clustered, make_queries
+    os.makedirs(IDX, exist_ok=True)
+    fb, fq, fg = (os.path.join(IDX, x) for x in
+                  ("base.npy", "queries.npy", "gt.npy"))
+    if os.path.exists(fb):
+        return np.load(fb), np.load(fq), np.load(fg)
+    base = make_clustered(N, DIM, n_clusters=96, seed=0)
+    q = make_queries(NQ, base, seed=1)
+    from repro.core import pq
+    gt = pq.groundtruth(q, base, 10)
+    np.save(fb, base), np.save(fq, q), np.save(fg, gt)
+    return base, q, gt
+
+
+def graph(base):
+    from repro.core.vamana import build_vamana
+    fg = os.path.join(IDX, "graph.npy")
+    if os.path.exists(fg):
+        return np.load(fg)
+    t0 = time.time()
+    g = build_vamana(base, R=R, L=BUILD_L, seed=0, two_pass=False,
+                     log_every=4000)
+    print(f"[bench] vamana build {time.time()-t0:.0f}s")
+    np.save(fg, g)
+    return g
+
+
+def index_path(mode: str, m: int) -> str:
+    return os.path.join(IDX, f"{mode}_m{m}")
+
+
+def ensure_indices(ms=(DEFAULT_M,), modes=("aisaq", "diskann"),
+                   shared_centroids_for=None):
+    """Build (cached) indices for each (mode, m). Returns paths dict."""
+    import jax
+    from repro.core import pq
+    from repro.core.index_io import write_index
+    base, q, gt = corpus()
+    g = graph(base)
+    paths = {}
+    for m in ms:
+        cache = {}
+        for mode in modes:
+            p = index_path(mode, m)
+            paths[(mode, m)] = p
+            if os.path.exists(os.path.join(p, "meta.json")):
+                continue
+            if "cents" not in cache:
+                cb = pq.train_codebooks(jax.random.PRNGKey(m), base, m=m,
+                                        iters=8)
+                cache["cents"] = np.asarray(cb.centroids)
+                cache["codes"] = np.asarray(pq.encode(cb, base))
+            write_index(p, vectors=base, graph=g, centroids=cache["cents"],
+                        codes=cache["codes"], metric="l2", mode=mode)
+    return paths
+
+
+def ensure_subcorpora(n_sub=5, m=DEFAULT_M):
+    """Sub-corpus indices sharing one PQ-centroid set (Table 4)."""
+    import jax
+    from repro.core import pq
+    from repro.configs.base import IndexConfig
+    from repro.core.build import build_index
+    base, _, _ = corpus()
+    cb = pq.train_codebooks(jax.random.PRNGKey(m), base, m=m, iters=8)
+    cents = np.asarray(cb.centroids)
+    sub_n = 2000
+    cfg = IndexConfig(name="sub", n_vectors=sub_n, dim=DIM, R=16, pq_m=m,
+                      build_L=24)
+    paths = {}
+    for i in range(n_sub):
+        p = os.path.join(IDX, f"sub_{i}")
+        paths[f"sub{i}"] = p
+        if not os.path.exists(os.path.join(p, "meta.json")):
+            build_index(p, base[i * sub_n:(i + 1) * sub_n], cfg,
+                        mode="aisaq", shared_centroids=cents)
+    return paths
+
+
+def rss_mb() -> float:
+    import psutil
+    return psutil.Process().memory_info().rss / 1e6

@@ -1,0 +1,23 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=["paper", "device"], default=None)
+    args = ap.parse_args(argv)
+    rows = []
+    if args.only in (None, "paper"):
+        from benchmarks.bench_paper import all_benchmarks as paper
+        rows += paper()
+    if args.only in (None, "device"):
+        from benchmarks.bench_device import all_benchmarks as device
+        rows += device()
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, GNNConfig, IndexConfig, LMConfig, MoEConfig, RecsysConfig,
+    ShapeConfig, LM_SHAPES, GNN_SHAPES, REC_SHAPES, ANN_SHAPES,
+)
+from repro.configs.registry import get_arch, list_archs, ASSIGNED_ARCHS  # noqa: F401

@@ -1,0 +1,40 @@
+"""The paper's own index configs (Table 1) + reduced variants for CPU runs.
+
+These are registered as extra `ann`-family architectures so the dry-run and
+benchmarks can exercise the paper's core contribution end-to-end on the same
+mesh as the assigned architectures.
+"""
+from repro.configs.base import ArchConfig, IndexConfig, ANN_SHAPES
+
+# Table 1, column SIFT1M: float32, d=128, R=56, b_pq=128 (=> B_AiSAQ fills 4KiB*N)
+SIFT1M = IndexConfig(
+    name="sift1m", n_vectors=1_000_000, dim=128, data_dtype="float32",
+    metric="l2", R=56, pq_m=128,
+)
+
+# Table 1, column SIFT1B: uint8, d=128, R=52, b_pq=32 (B_AiSAQ == B_DiskANN == 4KiB? no:
+# b_full=128, chunk fits one 4 KiB block either way — the case where AiSAQ is
+# latency-neutral or faster, per paper §4.3)
+SIFT1B = IndexConfig(
+    name="sift1b", n_vectors=1_000_000_000, dim=128, data_dtype="uint8",
+    metric="l2", R=52, pq_m=32,
+)
+
+# Table 1, column KILT E5 22M: float32, d=1024, MIPS, R=69, b_pq=128
+KILT_E5_22M = IndexConfig(
+    name="kilt-e5-22m", n_vectors=22_220_792, dim=1024, data_dtype="float32",
+    metric="mips", R=69, pq_m=128,
+)
+
+ARCH_SIFT1M = ArchConfig(
+    arch_id="aisaq-sift1m", family="ann", model=SIFT1M, shapes=ANN_SHAPES,
+    source="paper Table 1",
+)
+ARCH_SIFT1B = ArchConfig(
+    arch_id="aisaq-sift1b", family="ann", model=SIFT1B, shapes=ANN_SHAPES,
+    source="paper Table 1",
+)
+ARCH_KILT = ArchConfig(
+    arch_id="aisaq-kilt-e5", family="ann", model=KILT_E5_22M, shapes=ANN_SHAPES,
+    source="paper Table 1",
+)

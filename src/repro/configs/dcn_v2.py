@@ -1,0 +1,22 @@
+"""dcn-v2 [arXiv:2008.13535; paper] — 3 cross layers + deep MLP."""
+from repro.configs.base import ArchConfig, RecsysConfig, REC_SHAPES
+from repro.configs.dlrm_rm2 import CRITEO_TB_VOCABS
+
+MODEL = RecsysConfig(
+    name="dcn-v2",
+    kind="dcnv2",
+    embed_dim=16,
+    vocab_sizes=CRITEO_TB_VOCABS,
+    n_dense=13,
+    mlp=(1024, 1024, 512),
+    n_cross_layers=3,
+    interaction="cross",
+)
+
+ARCH = ArchConfig(
+    arch_id="dcn-v2",
+    family="recsys",
+    model=MODEL,
+    shapes=REC_SHAPES,
+    source="arXiv:2008.13535; paper",
+)

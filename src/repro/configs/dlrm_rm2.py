@@ -1,0 +1,32 @@
+"""dlrm-rm2 [arXiv:1906.00091; paper] — Criteo-1TB-class embedding tables.
+
+Vocab sizes are the MLPerf/Criteo-Terabyte cardinalities (26 sparse fields,
+~882M total rows -> ~226 GB of fp32 embeddings at dim 64: a genuinely
+storage-tier table set, which is where the paper's PQ-offload applies).
+"""
+from repro.configs.base import ArchConfig, RecsysConfig, REC_SHAPES
+
+CRITEO_TB_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+MODEL = RecsysConfig(
+    name="dlrm-rm2",
+    kind="dlrm",
+    embed_dim=64,
+    vocab_sizes=CRITEO_TB_VOCABS,
+    n_dense=13,
+    bot_mlp=(512, 256, 64),
+    top_mlp=(512, 512, 256, 1),
+    interaction="dot",
+)
+
+ARCH = ArchConfig(
+    arch_id="dlrm-rm2",
+    family="recsys",
+    model=MODEL,
+    shapes=REC_SHAPES,
+    source="arXiv:1906.00091; paper",
+)

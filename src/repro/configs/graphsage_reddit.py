@@ -1,0 +1,19 @@
+"""graphsage-reddit [arXiv:1706.02216; paper] — 2-layer mean aggregator."""
+from repro.configs.base import ArchConfig, GNNConfig, GNN_SHAPES
+
+MODEL = GNNConfig(
+    name="graphsage-reddit",
+    n_layers=2,
+    d_hidden=128,
+    aggregator="mean",
+    sample_sizes=(25, 10),
+    n_classes=41,
+)
+
+ARCH = ArchConfig(
+    arch_id="graphsage-reddit",
+    family="gnn",
+    model=MODEL,
+    shapes=GNN_SHAPES,
+    source="arXiv:1706.02216; paper",
+)

@@ -1,0 +1,25 @@
+"""h2o-danube-1.8b [arXiv:2401.16818; hf] — llama+mistral mix with SWA."""
+from repro.configs.base import ArchConfig, LMConfig, LM_SHAPES
+
+MODEL = LMConfig(
+    name="h2o-danube-1.8b",
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=32000,
+    attention="sliding",
+    window=4096,                    # mistral-style sliding window
+    rope_theta=10_000.0,
+)
+
+ARCH = ArchConfig(
+    arch_id="h2o-danube-1.8b",
+    family="lm",
+    model=MODEL,
+    shapes=LM_SHAPES,
+    # sliding window => O(S*W) compute and window-bounded KV: long_500k runs.
+    source="arXiv:2401.16818; hf",
+)

@@ -1,0 +1,38 @@
+"""llama4-scout-17b-a16e [hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+MoE 16 routed top-1 + 1 shared expert per layer; iRoPE attention: chunked
+local attention (chunk 8192) with every 4th layer global (NoPE).
+"""
+from repro.configs.base import ArchConfig, LMConfig, MoEConfig, LM_SHAPES
+
+MODEL = LMConfig(
+    name="llama4-scout-17b-a16e",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    attention="chunked_global",
+    window=8192,                    # local-attention chunk length
+    global_every=4,                 # every 4th layer attends globally
+    rope_theta=500_000.0,
+    moe=MoEConfig(
+        n_experts=16,
+        top_k=1,
+        d_expert=8192,
+        n_shared_experts=1,
+        d_shared=8192,
+        capacity_factor=1.25,
+    ),
+)
+
+ARCH = ArchConfig(
+    arch_id="llama4-scout-17b-a16e",
+    family="lm",
+    model=MODEL,
+    shapes=LM_SHAPES,
+    # chunked-local + SP-decoded sparse global layers => long_500k runs.
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+)

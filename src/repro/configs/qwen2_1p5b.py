@@ -1,0 +1,27 @@
+"""qwen2-1.5b [arXiv:2407.10671; hf] — dense GQA kv=2 with QKV bias."""
+from repro.configs.base import ArchConfig, LMConfig, LM_SHAPES
+
+MODEL = LMConfig(
+    name="qwen2-1.5b",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+    attention="full",
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)
+
+ARCH = ArchConfig(
+    arch_id="qwen2-1.5b",
+    family="lm",
+    model=MODEL,
+    shapes=LM_SHAPES,
+    skip_shapes=("long_500k",),
+    skip_reason="pure full attention (DESIGN.md §4)",
+    source="arXiv:2407.10671; hf",
+)

@@ -1,0 +1,34 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B; hf] — 60 routed top-4 + 4 shared."""
+from repro.configs.base import ArchConfig, LMConfig, MoEConfig, LM_SHAPES
+
+MODEL = LMConfig(
+    name="qwen2-moe-a2.7b",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,                      # routed-expert hidden (per spec line)
+    vocab_size=151936,
+    qkv_bias=True,
+    attention="full",
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(
+        n_experts=60,
+        top_k=4,
+        d_expert=1408,
+        n_shared_experts=4,
+        d_shared=5632,              # 4 shared experts x 1408
+        capacity_factor=1.25,
+    ),
+)
+
+ARCH = ArchConfig(
+    arch_id="qwen2-moe-a2.7b",
+    family="lm",
+    model=MODEL,
+    shapes=LM_SHAPES,
+    skip_shapes=("long_500k",),
+    skip_reason="pure full attention (DESIGN.md §4)",
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B; hf",
+)

@@ -1,0 +1,29 @@
+"""qwen3-1.7b [hf:Qwen/Qwen3-8B family; hf] — dense, GQA kv=8, qk_norm."""
+from repro.configs.base import ArchConfig, LMConfig, LM_SHAPES
+
+MODEL = LMConfig(
+    name="qwen3-1.7b",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6144,
+    vocab_size=151936,
+    qk_norm=True,
+    attention="full",
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+)
+
+ARCH = ArchConfig(
+    arch_id="qwen3-1.7b",
+    family="lm",
+    model=MODEL,
+    shapes=LM_SHAPES,
+    skip_shapes=("long_500k",),
+    skip_reason="pure full attention: 500k decode is quadratic-KV with no "
+                "published sub-quadratic variant for this checkpoint "
+                "(DESIGN.md §4)",
+    source="hf:Qwen/Qwen3-8B; hf",
+)

@@ -1,0 +1,25 @@
+"""sasrec [arXiv:1808.09781; paper] — self-attentive sequential recommender.
+
+Item vocabulary is set to 1M so retrieval_cand (1 query x 1e6 candidates)
+scores against the full catalogue — the paper's (AiSAQ's) retrieval regime.
+"""
+from repro.configs.base import ArchConfig, RecsysConfig, REC_SHAPES
+
+MODEL = RecsysConfig(
+    name="sasrec",
+    kind="sasrec",
+    embed_dim=50,
+    vocab_sizes=(1_000_000,),       # item catalogue
+    seq_len=50,
+    n_blocks=2,
+    n_heads=1,
+    interaction="self-attn-seq",
+)
+
+ARCH = ArchConfig(
+    arch_id="sasrec",
+    family="recsys",
+    model=MODEL,
+    shapes=REC_SHAPES,
+    source="arXiv:1808.09781; paper",
+)

@@ -1,0 +1,25 @@
+"""wide-deep [arXiv:1606.07792; paper] — 40 sparse fields, concat interaction."""
+from repro.configs.base import ArchConfig, RecsysConfig, REC_SHAPES
+
+# 40 fields spanning 1e3..1e7 rows (deterministic synthetic cardinalities in
+# the spirit of the paper's app-store features; total ~88M rows).
+WD_VOCABS = tuple(10 ** (3 + (i % 5)) for i in range(40))
+
+MODEL = RecsysConfig(
+    name="wide-deep",
+    kind="widedeep",
+    embed_dim=32,
+    vocab_sizes=WD_VOCABS,
+    n_dense=0,
+    mlp=(1024, 512, 256),
+    multi_hot=2,                    # wide&deep uses multi-hot cross features
+    interaction="concat",
+)
+
+ARCH = ArchConfig(
+    arch_id="wide-deep",
+    family="recsys",
+    model=MODEL,
+    shapes=REC_SHAPES,
+    source="arXiv:1606.07792; paper",
+)

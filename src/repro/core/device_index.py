@@ -1,0 +1,220 @@
+"""Device (TPU-target) AiSAQ index: HBM chunk table + while_loop beam search.
+
+The HBM-resident `(N, stride/4)` int32 chunk table is the "storage tier"
+(DESIGN.md §2). Per-hop work — chunk gather, parse, inline-PQ ADC — is
+`kernels.ops.fused_hop` (Pallas on TPU, jnp ref elsewhere). Nothing
+N-proportional is ever needed in VMEM: the only per-query fast-tier state is
+the (L,) candidate list, the (m, ks) LUT and the re-rank pool — the paper's
+`(R + n_ep)·b_pq` residency invariant, tier-shifted.
+
+The search loop is batched: all queries hop together; finished queries pad
+their frontier with -1 (the hop kernel emits +inf for those lanes).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunk_layout import ChunkLayout, pack_chunks_device
+from repro.kernels import ops
+
+
+class DeviceIndex(NamedTuple):
+    chunk_words: jax.Array        # (N, stride/4) int32 — HBM storage tier
+    centroids: jax.Array          # (m, ks, dsub) f32
+    ep_ids: jax.Array             # (n_ep,) int32
+    ep_codes: jax.Array           # (n_ep, m) int32
+    pq_codes: Optional[jax.Array] = None   # (N, m) — diskann mode ONLY
+
+    @property
+    def n(self) -> int:
+        return self.chunk_words.shape[0]
+
+    def fast_tier_bytes(self, n_queries: int, L: int) -> int:
+        """Bytes that must live in the fast tier during search (paper T2)."""
+        m, ks = self.centroids.shape[0], self.centroids.shape[1]
+        per_q = 4 * (m * ks + 3 * L)          # LUT + candidate list + pool
+        resident = self.centroids.size * 4 + self.ep_codes.size * 4
+        if self.pq_codes is not None:         # DiskANN keeps ALL codes hot
+            resident += self.pq_codes.size * self.pq_codes.dtype.itemsize
+        return int(resident + per_q * n_queries)
+
+
+def from_arrays(vectors: np.ndarray, graph: np.ndarray, centroids: np.ndarray,
+                codes: np.ndarray, *, mode: str = "aisaq",
+                block_bytes: int = 4096) -> Tuple[DeviceIndex, ChunkLayout]:
+    n, d = vectors.shape
+    layout = ChunkLayout(
+        mode=mode, dim=d,
+        data_dtype="uint8" if vectors.dtype == np.uint8 else "float32",
+        R=graph.shape[1], pq_m=codes.shape[1], block_bytes=block_bytes)
+    dev = pack_chunks_device(vectors, graph, codes, layout)
+    words = np.ascontiguousarray(dev).view(np.int32).reshape(n, -1)
+    mean = vectors.astype(np.float32).mean(axis=0)
+    dd = ((vectors.astype(np.float32) - mean) ** 2).sum(axis=1)
+    ep = np.argsort(dd)[:1].astype(np.int32)
+    idx = DeviceIndex(
+        chunk_words=jnp.asarray(words),
+        centroids=jnp.asarray(centroids, jnp.float32),
+        ep_ids=jnp.asarray(ep),
+        ep_codes=jnp.asarray(codes[ep].astype(np.int32)),
+        pq_codes=jnp.asarray(codes) if mode == "diskann" else None)
+    return idx, layout
+
+
+def load_device_index(path: str) -> Tuple[DeviceIndex, ChunkLayout, str]:
+    """Load a host-format index dir into device arrays (rebuild words)."""
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    codes = np.load(os.path.join(path, "pq_codes.npy"))
+    centroids = np.load(os.path.join(path, "pq_centroids.npy"))
+    # reconstruct vectors+graph from chunks.bin
+    from repro.core.chunk_layout import parse_chunk
+    layout = ChunkLayout(mode=meta["mode"], dim=meta["dim"],
+                         data_dtype=meta["data_dtype"], R=meta["R"],
+                         pq_m=meta["pq_m"], block_bytes=meta["block_bytes"])
+    raw = np.fromfile(os.path.join(path, "chunks.bin"), dtype=np.uint8)
+    n = meta["n"]
+    vecs = np.zeros((n, meta["dim"]),
+                    np.uint8 if meta["data_dtype"] == "uint8" else np.float32)
+    graph = np.zeros((n, meta["R"]), np.int32)
+    for i in range(n):
+        off = layout.file_offset(i)
+        v, ids, _ = parse_chunk(raw[off:off + layout.chunk_bytes], layout)
+        vecs[i], graph[i] = v, ids
+    idx, layout = from_arrays(vecs, graph, centroids, codes,
+                              mode=meta["mode"],
+                              block_bytes=meta["block_bytes"])
+    return idx, layout, meta["metric"]
+
+
+# ---------------------------------------------------------------------------
+# batched beam search (Algorithm 1 on device)
+# ---------------------------------------------------------------------------
+
+
+def _mask_intra_dups(ids: jax.Array) -> jax.Array:
+    """(nq, K) int -> bool mask of duplicate (non-first) occurrences."""
+    order = jnp.argsort(ids, axis=1)
+    srt = jnp.take_along_axis(ids, order, axis=1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros_like(srt[:, :1], dtype=bool), srt[:, 1:] == srt[:, :-1]],
+        axis=1)
+    dup = jnp.zeros_like(dup_sorted)
+    qi = jnp.arange(ids.shape[0])[:, None]
+    return dup.at[qi, order].set(dup_sorted)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "L", "w", "max_hops", "layout", "metric", "backend"))
+def beam_search_device(index: DeviceIndex, queries: jax.Array, *, k: int,
+                       L: int, w: int = 4, max_hops: int = 128,
+                       layout: ChunkLayout, metric: str = "l2",
+                       backend: str = "auto"):
+    """Batched DiskANN/AiSAQ beam search. Returns (topk_ids, topk_d, hops)."""
+    nq = queries.shape[0]
+    N = index.n
+    R = layout.R
+    lut = ops.build_lut(queries, index.centroids, metric=metric,
+                        backend=backend)
+    n_ep = index.ep_ids.shape[0]
+    ep_ids = jnp.broadcast_to(index.ep_ids[None, :], (nq, n_ep))
+    ep_d = jax.vmap(lambda l: jnp.sum(
+        jnp.take(l.reshape(-1),
+                 index.ep_codes + jnp.arange(lut.shape[1]) * lut.shape[2]),
+        axis=-1))(lut)                                    # (nq, n_ep)
+    pad = L - n_ep
+    cand_ids = jnp.concatenate(
+        [ep_ids, jnp.full((nq, pad), -1, jnp.int32)], axis=1)
+    cand_d = jnp.concatenate(
+        [ep_d, jnp.full((nq, pad), jnp.inf, jnp.float32)], axis=1)
+    cand_exp = jnp.concatenate(
+        [jnp.zeros((nq, n_ep), bool), jnp.ones((nq, pad), bool)], axis=1)
+    # visited set as a PACKED bitmask (N/32 uint32 words per query, §Perf
+    # "bitmask"): ids are pre-deduplicated before insertion, so each bit is
+    # added at most once and scatter-add == bitwise OR.
+    n_words = -(-N // 32)
+    qi = jnp.arange(nq)[:, None]
+    inserted = jnp.zeros((nq, n_words), jnp.uint32)
+    inserted = inserted.at[qi, ep_ids >> 5].add(
+        (jnp.uint32(1) << (ep_ids & 31).astype(jnp.uint32)))
+    pool_ids = jnp.full((nq, L), -1, jnp.int32)
+    pool_d = jnp.full((nq, L), jnp.inf, jnp.float32)
+
+    def cond(state):
+        cand_ids, cand_d, cand_exp, inserted, pool_ids, pool_d, hops = state
+        active = jnp.any(~cand_exp & jnp.isfinite(cand_d))
+        return active & (hops < max_hops)
+
+    def body(state):
+        cand_ids, cand_d, cand_exp, inserted, pool_ids, pool_d, hops = state
+        # 1. frontier: top-w unexpanded by PQ distance
+        sel = jnp.where(cand_exp, jnp.inf, cand_d)
+        negd, pos = jax.lax.top_k(-sel, w)                 # (nq, w)
+        fvalid = jnp.isfinite(negd)
+        fids = jnp.where(fvalid,
+                         jnp.take_along_axis(cand_ids, pos, axis=1), -1)
+        cand_exp = cand_exp.at[qi, pos].max(fvalid)
+        # 2. expand: chunk gather + parse + exact dist + neighbor ADC
+        if layout.mode == "aisaq":
+            exact, nids, nd = ops.fused_hop(
+                index.chunk_words, fids, lut, queries, layout=layout,
+                metric=metric, backend=backend)
+        else:
+            # DiskANN-on-device: ids from chunks, codes from the resident
+            # (N, m) table — the memory-hungry baseline placement.
+            from repro.kernels import ref as _ref
+            exact, nids, _ = jax.vmap(functools.partial(
+                _ref.fused_hop_ref, index.chunk_words, layout=layout,
+                metric=metric))(fids, lut, queries)
+            flat = jnp.clip(nids.reshape(nq, -1), 0, N - 1)
+            codes = index.pq_codes[flat]                   # (nq, w*R, m)
+            m, ks = lut.shape[1], lut.shape[2]
+            idxs = codes.astype(jnp.int32) + jnp.arange(m) * ks
+            nd = jax.vmap(lambda l, ii: jnp.take(l.reshape(-1), ii).sum(-1)
+                          )(lut, idxs).reshape(nq, w, R)
+            nd = jnp.where(nids >= 0, nd, jnp.inf)
+        # 3. re-rank pool (exact distances of expanded nodes)
+        pool_ids = jnp.concatenate([pool_ids, fids], axis=1)
+        pool_d = jnp.concatenate([pool_d, exact], axis=1)
+        npd, ppos = jax.lax.top_k(-pool_d, L)
+        pool_d = -npd
+        pool_ids = jnp.take_along_axis(pool_ids, ppos, axis=1)
+        # 4. neighbor insertion with dedup (packed-bitmask membership)
+        nids_f = nids.reshape(nq, w * R)
+        nd_f = nd.reshape(nq, w * R)
+        safe = jnp.clip(nids_f, 0, N - 1)
+        words = jnp.take_along_axis(inserted, safe >> 5, axis=1)
+        seen = ((words >> (safe & 31).astype(jnp.uint32)) & 1).astype(bool)
+        bad = (nids_f < 0) | seen | _mask_intra_dups(nids_f)
+        nd_f = jnp.where(bad, jnp.inf, nd_f)
+        nids_f = jnp.where(bad, -1, nids_f)
+        safe = jnp.clip(nids_f, 0, N - 1)
+        bits = jnp.where(bad, jnp.uint32(0),
+                         jnp.uint32(1) << (safe & 31).astype(jnp.uint32))
+        inserted = inserted.at[qi, safe >> 5].add(bits)
+        # 5. trim candidate list to L by PQ distance
+        all_ids = jnp.concatenate([cand_ids, nids_f], axis=1)
+        all_d = jnp.concatenate([cand_d, nd_f], axis=1)
+        all_exp = jnp.concatenate(
+            [cand_exp, jnp.ones_like(nids_f, bool) & ~jnp.isfinite(nd_f)],
+            axis=1)
+        negd2, cpos = jax.lax.top_k(-all_d, L)
+        cand_d = -negd2
+        cand_ids = jnp.take_along_axis(all_ids, cpos, axis=1)
+        cand_exp = jnp.take_along_axis(all_exp, cpos, axis=1)
+        return cand_ids, cand_d, cand_exp, inserted, pool_ids, pool_d, hops + 1
+
+    state = (cand_ids, cand_d, cand_exp, inserted, pool_ids, pool_d,
+             jnp.array(0, jnp.int32))
+    state = jax.lax.while_loop(cond, body, state)
+    _, _, _, _, pool_ids, pool_d, hops = state
+    negd, pos = jax.lax.top_k(-pool_d, k)
+    return jnp.take_along_axis(pool_ids, pos, axis=1), -negd, hops

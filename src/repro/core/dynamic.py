@@ -1,0 +1,208 @@
+"""Dynamic index maintenance: in-place insertion + tombstone deletion.
+
+The paper's conclusion: "[near-zero load time] will enable LLMs with RAG to
+employ more simple index addition or filter search algorithms." This module
+implements exactly that enablement on the host backend:
+
+  * insert(vec): FreshDiskANN-style — greedy-search for neighbor candidates,
+    RobustPrune, APPEND a new node chunk to chunks.bin, patch the reverse
+    edges' chunks in place (pwrite). AiSAQ's inline codes mean patching a
+    neighbor's chunk also writes the new node's PQ code into it — the
+    placement invariant is preserved under mutation.
+  * delete(id): tombstone — removed from results and from future traversal
+    expansion targets; space reclaimed offline (compaction is a rebuild).
+  * filtered search: per-query predicate over node ids (label bitmap) —
+    candidates failing the filter still ROUTE (graph stays navigable) but
+    never enter the re-rank pool.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Optional, Set
+
+import numpy as np
+
+from repro.core.chunk_layout import B_NUM
+from repro.core.index_io import HostIndex, SearchStats, np_adc, np_build_lut
+
+
+class DynamicHostIndex(HostIndex):
+    """HostIndex + insert/delete/filtered-search (aisaq mode)."""
+
+    @classmethod
+    def load(cls, path: str, **kw) -> "DynamicHostIndex":
+        self = super().load(path, **kw)  # type: ignore[misc]
+        assert self.meta["mode"] == "aisaq", "dynamic ops need inline codes"
+        os.close(self.fd)
+        self.fd = os.open(os.path.join(path, "chunks.bin"), os.O_RDWR)
+        # lazy (mmap) code table for build-time neighbor-code fetches; new
+        # codes accumulate in RAM until flush()
+        self._codes_mm = np.load(os.path.join(path, "pq_codes.npy"),
+                                 mmap_mode="r")
+        self._new_codes: list = []
+        self.n = self.meta["n"]
+        tomb = os.path.join(path, "tombstones.json")
+        self.tombstones: Set[int] = set(
+            json.load(open(tomb))) if os.path.exists(tomb) else set()
+        return self
+
+    # -- helpers -------------------------------------------------------------
+    def _code_of(self, node: int) -> np.ndarray:
+        base = self._codes_mm.shape[0]
+        if node < base:
+            return np.asarray(self._codes_mm[node])
+        return self._new_codes[node - base]
+
+    def _encode(self, vec: np.ndarray) -> np.ndarray:
+        c = self.centroids                      # (m, ks, dsub)
+        m, ks, dsub = c.shape
+        sub = vec.astype(np.float32).reshape(m, 1, dsub)
+        d = ((c - sub) ** 2).sum(-1)            # (m, ks)
+        return d.argmin(-1).astype(np.uint8)
+
+    def _read_node(self, node: int):
+        from repro.core.chunk_layout import parse_chunk
+        lay = self.layout
+        raw = os.pread(self.fd, lay.chunk_bytes, lay.file_offset(node))
+        return parse_chunk(np.frombuffer(raw, np.uint8), lay)
+
+    def _write_node(self, node: int, vec, nbr_ids: np.ndarray,
+                    nbr_codes: np.ndarray):
+        lay = self.layout
+        chunk = np.zeros(lay.chunk_bytes, np.uint8)
+        vb = vec.astype(np.uint8) if lay.data_dtype == "uint8" else \
+            vec.astype(np.float32).view(np.uint8)
+        chunk[:lay.b_full] = vb
+        ids = np.full(lay.R, -1, np.int32)
+        ids[:len(nbr_ids)] = nbr_ids
+        deg = np.int32(len(nbr_ids))
+        chunk[lay.off_deg:lay.off_deg + B_NUM] = \
+            deg.reshape(1).view(np.uint8)
+        chunk[lay.off_ids:lay.off_ids + lay.R * B_NUM] = ids.view(np.uint8)
+        pq_block = np.zeros((lay.R, lay.pq_m), np.uint8)
+        pq_block[:len(nbr_ids)] = nbr_codes
+        chunk[lay.off_pq:lay.off_pq + lay.R * lay.pq_m] = pq_block.reshape(-1)
+        off = lay.file_offset(node)
+        # extend the file to a whole block if the node opens a new one
+        end = off - off % lay.block_bytes + lay.io_bytes
+        cur = os.fstat(self.fd).st_size
+        if end > cur:
+            os.pwrite(self.fd, b"\0" * (end - cur), cur)
+        os.pwrite(self.fd, chunk.tobytes(), off)
+
+    def _dist(self, a: np.ndarray, b: np.ndarray) -> float:
+        a, b = a.astype(np.float32), b.astype(np.float32)
+        if self.meta["metric"] == "mips":
+            return float(-(a @ b))
+        return float(((a - b) ** 2).sum())
+
+    # -- insertion -------------------------------------------------------------
+    def insert(self, vec: np.ndarray, *, L: int = 48, alpha: float = 1.2
+               ) -> int:
+        """Add one vector; returns its node id. O(search + R chunk writes)."""
+        new_id = self.n
+        code = self._encode(vec)
+        # candidate pool: the expanded set of a search for `vec`
+        _, stats = self.search(vec.astype(np.float32), k=1, L=L)
+        cand_ids, cand_vecs = [], []
+        # re-walk: collect expanded nodes + their vectors via chunk reads
+        ids, _ = self.search(vec.astype(np.float32), k=min(L, 16), L=L)
+        pool = list(dict.fromkeys(int(i) for i in ids))
+        extra = []
+        for p in pool:
+            _, nbrs, _ = self._read_node(p)
+            extra += [int(x) for x in nbrs[nbrs >= 0]]
+        pool = list(dict.fromkeys(pool + extra))[:4 * self.layout.R]
+        pool = [p for p in pool if p not in self.tombstones]
+        vecs = {p: self._read_node(p)[0] for p in pool}
+        # RobustPrune over the pool
+        dists = sorted(pool, key=lambda p: self._dist(vec, vecs[p]))
+        chosen: list = []
+        alive = dict.fromkeys(dists, True)
+        for p in dists:
+            if len(chosen) >= self.layout.R:
+                break
+            if not alive[p]:
+                continue
+            chosen.append(p)
+            for q in dists:
+                if alive[q] and q != p and \
+                        alpha * self._dist(vecs[p], vecs[q]) <= \
+                        self._dist(vec, vecs[q]):
+                    alive[q] = False
+        nbr_codes = np.stack([self._code_of(p) for p in chosen]) if chosen \
+            else np.zeros((0, self.layout.pq_m), np.uint8)
+        self._write_node(new_id, vec, np.asarray(chosen, np.int32), nbr_codes)
+        self._new_codes.append(code)
+        self.n += 1
+        self.meta["n"] = self.n
+        # reverse edges: patch each chosen neighbor's chunk in place
+        for p in chosen:
+            pvec, pids, pcodes = self._read_node(p)
+            valid = pids[pids >= 0]
+            if new_id in valid:
+                continue
+            if len(valid) < self.layout.R:
+                ids2 = np.concatenate([valid, [new_id]]).astype(np.int32)
+                codes2 = np.concatenate(
+                    [pcodes[:len(valid)], code[None]], axis=0)
+            else:
+                # over-degree: RobustPrune p's neighborhood ∪ {new}
+                npool = [int(x) for x in valid] + [new_id]
+                nvecs = {new_id: vec}
+                for q in valid:
+                    nvecs[int(q)] = self._read_node(int(q))[0]
+                order = sorted(npool, key=lambda q: self._dist(pvec, nvecs[q]))
+                keep: list = []
+                alive2 = dict.fromkeys(order, True)
+                for q in order:
+                    if len(keep) >= self.layout.R:
+                        break
+                    if not alive2[q]:
+                        continue
+                    keep.append(q)
+                    for r in order:
+                        if alive2[r] and r != q and \
+                                alpha * self._dist(nvecs[q], nvecs[r]) <= \
+                                self._dist(pvec, nvecs[r]):
+                            alive2[r] = False
+                ids2 = np.asarray(keep, np.int32)
+                codes2 = np.stack([self._code_of(q) for q in keep])
+            self._write_node(p, pvec, ids2, codes2)
+        return new_id
+
+    # -- deletion --------------------------------------------------------------
+    def delete(self, node: int):
+        self.tombstones.add(int(node))
+
+    def flush(self):
+        """Persist appended codes + tombstones + meta."""
+        if self._new_codes:
+            codes = np.concatenate(
+                [np.asarray(self._codes_mm),
+                 np.stack(self._new_codes)], axis=0)
+            np.save(os.path.join(self.path, "pq_codes.npy"), codes)
+            self._codes_mm = np.load(os.path.join(self.path, "pq_codes.npy"),
+                                     mmap_mode="r")
+            self._new_codes = []
+        with open(os.path.join(self.path, "tombstones.json"), "w") as f:
+            json.dump(sorted(self.tombstones), f)
+        with open(os.path.join(self.path, "meta.json"), "w") as f:
+            json.dump(self.meta, f, indent=1)
+
+    # -- filtered + tombstone-aware search --------------------------------------
+    def search(self, q, k, L, w=4,
+               predicate: Optional[Callable[[int], bool]] = None):
+        ids, stats = super().search(q, k, L, w)
+        drop = self.tombstones
+        ok = [i for i in ids if int(i) not in drop
+              and (predicate is None or predicate(int(i)))]
+        if len(ok) < k and (drop or predicate is not None):
+            # widen once: tombstones/filters thin the pool
+            ids2, s2 = super().search(q, k * 4, max(L, 2 * k * 4), w)
+            stats.ios += s2.ios
+            stats.bytes_read += s2.bytes_read
+            ok = [i for i in ids2 if int(i) not in drop
+                  and (predicate is None or predicate(int(i)))]
+        return np.asarray(ok[:k], np.int64), stats

@@ -1,0 +1,255 @@
+"""On-disk index format + the host (storage-backed) search backend.
+
+This is the *faithful reproduction* path: real files, real ``os.pread`` per
+node expansion, real resident-set accounting. Directory format:
+
+  meta.json          layout + search metadata (entry points, metric, ...)
+  chunks.bin         block-aligned node chunks (chunk_layout.pack_chunks_file)
+  pq_centroids.npy   (m, ks, dsub) f32 — the "PQ centroid" metadata
+  pq_codes.npy       (N, m) u8 — loaded to RAM only in diskann mode
+  ep_codes.npy       (n_ep, m) u8 — the ONLY per-node codes AiSAQ keeps in RAM
+  groundtruth.npy    optional, for evaluation only (never loaded at serve)
+
+``HostIndex.load`` measures wall-clock load time; ``resident_bytes`` reports
+exactly which arrays are RAM-resident, which is the paper's Table 2 metric.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.chunk_layout import B_NUM, ChunkLayout, pack_chunks_file, parse_chunk
+
+
+# ---------------------------------------------------------------------------
+# numpy twins of pq.build_lut / pq.adc (host backend must not pay jit costs)
+# ---------------------------------------------------------------------------
+
+
+def np_build_lut(centroids: np.ndarray, q: np.ndarray, metric: str) -> np.ndarray:
+    """centroids (m, ks, dsub), q (d,) -> (m, ks) f32 LUT."""
+    m, ks, dsub = centroids.shape
+    qs = q.astype(np.float32).reshape(m, 1, dsub)
+    if metric == "mips":
+        return -np.einsum("mkd,mxd->mk", centroids, qs)
+    diff = centroids - qs
+    return np.einsum("mkd,mkd->mk", diff, diff)
+
+
+def np_adc(lut: np.ndarray, codes: np.ndarray) -> np.ndarray:
+    """lut (m, ks), codes (..., m) -> (...,) f32."""
+    m = lut.shape[0]
+    return lut[np.arange(m), codes.astype(np.int64)].sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# writer
+# ---------------------------------------------------------------------------
+
+
+def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
+                centroids: np.ndarray, codes: np.ndarray, metric: str,
+                mode: str, block_bytes: int = 4096, n_ep: int = 1,
+                entry_points: Optional[np.ndarray] = None,
+                extra_meta: Optional[dict] = None) -> dict:
+    """Serialize one index. Returns the meta dict."""
+    os.makedirs(path, exist_ok=True)
+    n, d = vectors.shape
+    data_dtype = "uint8" if vectors.dtype == np.uint8 else "float32"
+    layout = ChunkLayout(mode=mode, dim=d, data_dtype=data_dtype,
+                         R=graph.shape[1], pq_m=codes.shape[1],
+                         block_bytes=block_bytes)
+    if entry_points is None:
+        mean = vectors.astype(np.float32).mean(axis=0)
+        dd = ((vectors.astype(np.float32) - mean) ** 2).sum(axis=1)
+        entry_points = np.argsort(dd)[:n_ep]
+    entry_points = np.asarray(entry_points, dtype=np.int64)[:n_ep]
+    with open(os.path.join(path, "chunks.bin"), "wb") as f:
+        f.write(pack_chunks_file(vectors, graph, codes, layout))
+    np.save(os.path.join(path, "pq_centroids.npy"),
+            centroids.astype(np.float32))
+    np.save(os.path.join(path, "pq_codes.npy"), codes.astype(np.uint8))
+    np.save(os.path.join(path, "ep_codes.npy"),
+            codes[entry_points].astype(np.uint8))
+    cent_hash = int(np.abs(centroids.astype(np.float64)).sum() * 1e6) & 0xFFFFFFFF
+    meta = dict(
+        n=int(n), dim=int(d), data_dtype=data_dtype, metric=metric, mode=mode,
+        R=int(graph.shape[1]), pq_m=int(codes.shape[1]),
+        pq_ks=int(centroids.shape[1]), block_bytes=int(block_bytes),
+        entry_points=[int(e) for e in entry_points],
+        chunk_bytes=layout.chunk_bytes, io_bytes=layout.io_bytes,
+        centroids_hash=cent_hash, **(extra_meta or {}))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+# ---------------------------------------------------------------------------
+# host search backend
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SearchStats:
+    hops: int = 0
+    ios: int = 0
+    bytes_read: int = 0
+    pq_dists: int = 0
+    latency_s: float = 0.0
+
+
+class HostIndex:
+    """Storage-backed index: DiskANN mode (codes in RAM) or AiSAQ mode."""
+
+    def __init__(self):
+        self.meta: dict = {}
+        self.layout: Optional[ChunkLayout] = None
+        self.centroids: Optional[np.ndarray] = None
+        self.ep_codes: Optional[np.ndarray] = None
+        self.pq_codes: Optional[np.ndarray] = None     # diskann mode only
+        self.fd: int = -1
+        self.path: str = ""
+        self.load_time_s: float = 0.0
+
+    # -- lifecycle ---------------------------------------------------------
+    @classmethod
+    def load(cls, path: str, mode: Optional[str] = None,
+             shared_centroids: Optional[np.ndarray] = None) -> "HostIndex":
+        """Open an index. `mode` may force diskann/aisaq residency policy.
+
+        `shared_centroids`: paper §4.4 — when switching between indices built
+        with the same PQ centroids, skip the centroid load entirely (only the
+        4 KiB meta.json + entry-point codes move).
+        """
+        t0 = time.perf_counter()
+        self = cls()
+        self.path = path
+        with open(os.path.join(path, "meta.json")) as f:
+            self.meta = json.load(f)
+        mode = mode or self.meta["mode"]
+        self.mode = mode
+        self.layout = ChunkLayout(
+            mode=self.meta["mode"], dim=self.meta["dim"],
+            data_dtype=self.meta["data_dtype"], R=self.meta["R"],
+            pq_m=self.meta["pq_m"], block_bytes=self.meta["block_bytes"])
+        if shared_centroids is not None:
+            self.centroids = shared_centroids
+        else:
+            self.centroids = np.load(os.path.join(path, "pq_centroids.npy"))
+        self.ep_codes = np.load(os.path.join(path, "ep_codes.npy"))
+        if mode == "diskann":
+            # DiskANN residency policy: ALL pq codes pinned in RAM.
+            self.pq_codes = np.load(os.path.join(path, "pq_codes.npy"))
+        self.fd = os.open(os.path.join(path, "chunks.bin"), os.O_RDONLY)
+        self.load_time_s = time.perf_counter() - t0
+        return self
+
+    def close(self):
+        if self.fd >= 0:
+            os.close(self.fd)
+            self.fd = -1
+
+    def resident_bytes(self, include_centroids: bool = True) -> int:
+        """RAM held by the index (paper Table 2's algorithmic portion)."""
+        total = self.ep_codes.nbytes
+        if include_centroids:
+            total += self.centroids.nbytes
+        if self.pq_codes is not None:
+            total += self.pq_codes.nbytes
+        return int(total)
+
+    # -- I/O -----------------------------------------------------------------
+    def _read_chunk(self, node: int, stats: SearchStats) -> np.ndarray:
+        lay = self.layout
+        off = lay.file_offset(node)
+        # OS reads whole blocks: model that faithfully for stats.
+        blk_start = off // lay.block_bytes * lay.block_bytes
+        nbytes = lay.io_bytes
+        raw = os.pread(self.fd, nbytes, blk_start)
+        stats.ios += 1
+        stats.bytes_read += nbytes
+        inner = off - blk_start
+        return np.frombuffer(raw, dtype=np.uint8)[inner:inner + lay.chunk_bytes]
+
+    # -- Algorithm 1 (faithful) ----------------------------------------------
+    def search(self, q: np.ndarray, k: int, L: int, w: int = 4
+               ) -> Tuple[np.ndarray, SearchStats]:
+        """DiskANN beam search with re-ranking (paper Algorithm 1)."""
+        t0 = time.perf_counter()
+        stats = SearchStats()
+        lay = self.layout
+        metric = self.meta["metric"]
+        lut = np_build_lut(self.centroids, q.astype(np.float32), metric)
+        eps = np.asarray(self.meta["entry_points"], dtype=np.int64)
+        # candidate list: ids, pq-dists, expanded?
+        cand_ids = eps.copy()
+        cand_d = np_adc(lut, self.ep_codes)                  # entry codes: RAM
+        stats.pq_dists += len(eps)
+        expanded: Dict[int, float] = {}                      # id -> exact dist
+        inserted = set(int(e) for e in eps)
+        while True:
+            order = np.argsort(cand_d, kind="stable")[:L]
+            cand_ids, cand_d = cand_ids[order], cand_d[order]
+            frontier = [int(i) for i in cand_ids if int(i) not in expanded][:w]
+            if not frontier:
+                break
+            stats.hops += 1
+            new_ids: List[np.ndarray] = []
+            new_d: List[np.ndarray] = []
+            for p in frontier:
+                raw = self._read_chunk(p, stats)
+                vec, ids, inline_codes = parse_chunk(raw, lay)
+                # full-precision distance from the chunk (re-rank pool V)
+                vf = vec.astype(np.float32)
+                if metric == "mips":
+                    expanded[p] = float(-(vf @ q))
+                else:
+                    expanded[p] = float(((vf - q) ** 2).sum())
+                valid = ids >= 0
+                ids = ids[valid]
+                fresh = np.array([i for i in ids if int(i) not in inserted],
+                                 dtype=np.int64)
+                if fresh.size == 0:
+                    continue
+                if self.mode == "aisaq":
+                    # THE AiSAQ step: neighbor codes come from the chunk we
+                    # just read — no N-sized RAM table is ever touched.
+                    codes = inline_codes[valid][
+                        [int(np.flatnonzero(ids == f)[0]) for f in fresh]]
+                else:
+                    codes = self.pq_codes[fresh]
+                d = np_adc(lut, codes)
+                stats.pq_dists += int(fresh.size)
+                inserted.update(int(f) for f in fresh)
+                new_ids.append(fresh)
+                new_d.append(d)
+            if new_ids:
+                cand_ids = np.concatenate([cand_ids] + new_ids)
+                cand_d = np.concatenate([cand_d] + new_d)
+        # re-rank by full-precision distances collected along the path
+        vids = np.array(list(expanded.keys()), dtype=np.int64)
+        vd = np.array(list(expanded.values()), dtype=np.float32)
+        topk = vids[np.argsort(vd, kind="stable")[:k]]
+        stats.latency_s = time.perf_counter() - t0
+        return topk, stats
+
+    def search_batch(self, Q: np.ndarray, k: int, L: int, w: int = 4):
+        ids = np.zeros((Q.shape[0], k), dtype=np.int64)
+        stats = []
+        for i in range(Q.shape[0]):
+            ids[i], s = self.search(Q[i], k, L, w)
+            stats.append(s)
+        return ids, stats
+
+
+def recall_at(ids: np.ndarray, gt: np.ndarray, k: int) -> float:
+    """k-recall@k over a batch: |pred_k ∩ gt_k| / k averaged."""
+    hits = 0
+    for row_p, row_g in zip(ids[:, :k], gt[:, :k]):
+        hits += len(set(map(int, row_p)) & set(map(int, row_g)))
+    return hits / (ids.shape[0] * k)

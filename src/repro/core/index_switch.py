@@ -1,0 +1,68 @@
+"""Multi-corpus index management + fast switching (paper §2.2, §4.4).
+
+The RAG scenario: one retriever process serves requests that may target any
+of several corpora. DiskANN must reload N-proportional PQ tables per switch;
+AiSAQ reloads only entry-point codes (+ centroids unless shared).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.index_io import HostIndex
+
+
+class IndexManager:
+    """Holds one active HostIndex; switches between registered corpora."""
+
+    def __init__(self, paths: Dict[str, str], mode: Optional[str] = None):
+        self.paths = dict(paths)
+        self.mode = mode
+        self.active_name: Optional[str] = None
+        self.active: Optional[HostIndex] = None
+        self._centroids_hash: Optional[int] = None
+        self._centroids: Optional[np.ndarray] = None
+
+    def switch(self, name: str, share_centroids: bool = True) -> float:
+        """Activate corpus `name`. Returns switch wall-time in seconds.
+
+        If the target index was built with the same PQ centroids as the
+        currently-loaded ones (hash match in meta.json) and
+        `share_centroids`, skip the centroid load — paper Table 4's 0.3 ms
+        row, where only ~4 KiB of metadata moves.
+        """
+        if name == self.active_name:
+            return 0.0
+        path = self.paths[name]
+        t0 = time.perf_counter()
+        shared = None
+        if share_centroids and self._centroids is not None:
+            import json, os
+            with open(os.path.join(path, "meta.json")) as f:
+                meta_peek = json.load(f)
+            if meta_peek.get("centroids_hash") == self._centroids_hash:
+                shared = self._centroids
+        old = self.active
+        self.active = HostIndex.load(path, mode=self.mode,
+                                     shared_centroids=shared)
+        self.active_name = name
+        self._centroids = self.active.centroids
+        self._centroids_hash = self.active.meta.get("centroids_hash")
+        dt = time.perf_counter() - t0
+        if old is not None:
+            old.close()
+        return dt
+
+    def search(self, q, k: int, L: int, w: int = 4):
+        assert self.active is not None, "switch() to a corpus first"
+        return self.active.search(q, k, L, w)
+
+    def resident_bytes(self) -> int:
+        return 0 if self.active is None else self.active.resident_bytes()
+
+    def close(self):
+        if self.active is not None:
+            self.active.close()
+            self.active = None

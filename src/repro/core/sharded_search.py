@@ -1,0 +1,135 @@
+"""Multi-device sharded ANN search — the paper's Fig. 5 multi-server system.
+
+Each device owns one dataset shard with its OWN sub-index (subgraph + entry
+point), exactly like the paper's per-server indices. A query fans out to all
+shards (replicated over the shard axes), each runs the local AiSAQ beam
+search, and local top-k results merge via all-gather + global top-k.
+
+Mesh mapping (DESIGN.md §2):
+  query batch  -> ('pod', 'data')   (paper: request load-balancer)
+  index shards -> ('model',)        (paper: servers on the ethernet/Lustre tier)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.chunk_layout import ChunkLayout
+from repro.core.device_index import DeviceIndex, beam_search_device
+
+
+class ShardedIndexArrays(NamedTuple):
+    """Stacked per-shard index arrays; leading dim = shard."""
+
+    chunk_words: jax.Array    # (S_h, N_s, W) int32
+    centroids: jax.Array      # (m, ks, dsub) f32 — replicated
+    ep_ids: jax.Array         # (S_h, n_ep) int32 (shard-local ids)
+    ep_codes: jax.Array       # (S_h, n_ep, m) int32
+    offsets: jax.Array        # (S_h,) int32 global-id offset per shard
+
+
+def stack_shards(shards: Sequence[Tuple[int, "np.ndarray", "np.ndarray"]],
+                 centroids: np.ndarray, codes_full: np.ndarray,
+                 layout: ChunkLayout) -> ShardedIndexArrays:
+    """shards: list of (global_offset, shard_vectors, shard_graph)."""
+    from repro.core.chunk_layout import pack_chunks_device
+    words, eps, epc, offs = [], [], [], []
+    n_max = max(v.shape[0] for _, v, _ in shards)
+    for off, vecs, graph in shards:
+        n = vecs.shape[0]
+        codes = codes_full[off:off + n]
+        dev = pack_chunks_device(vecs, graph, codes, layout)
+        w = np.ascontiguousarray(dev).view(np.int32).reshape(n, -1)
+        if n < n_max:  # pad ragged shards with unreachable nodes
+            w = np.pad(w, ((0, n_max - n), (0, 0)))
+        words.append(w)
+        mean = vecs.astype(np.float32).mean(axis=0)
+        dd = ((vecs.astype(np.float32) - mean) ** 2).sum(axis=1)
+        ep = np.argsort(dd)[:1].astype(np.int32)
+        eps.append(ep)
+        epc.append(codes[ep].astype(np.int32))
+        offs.append(off)
+    return ShardedIndexArrays(
+        chunk_words=jnp.asarray(np.stack(words)),
+        centroids=jnp.asarray(centroids, jnp.float32),
+        ep_ids=jnp.asarray(np.stack(eps)),
+        ep_codes=jnp.asarray(np.stack(epc)),
+        offsets=jnp.asarray(np.array(offs, np.int32)))
+
+
+def sharded_search_fn(mesh, *, k: int, L: int, w: int, max_hops: int,
+                      layout: ChunkLayout, metric: str, backend: str = "auto",
+                      query_axes: Tuple[str, ...] = ("data",),
+                      shard_axes: Tuple[str, ...] = ("model",),
+                      query_chunk: int = 0):
+    """Returns a jit-able fn(arrays: ShardedIndexArrays, queries) -> ids, d.
+
+    queries: (B, d) sharded over query_axes (may be empty => replicated —
+    "mode B", index sharded over every axis for billion-scale tables);
+    index shards over shard_axes. Output: (B, k) ids + dists like queries.
+
+    query_chunk > 0 processes queries in chunks inside lax.map, bounding the
+    per-query visited-bitmap working set (nq_chunk x N_shard bools).
+    """
+    qspec = P(query_axes, None) if query_axes else P(None, None)
+    sspec = P(shard_axes, None, None)
+
+    def local_search(words, cents, ep_ids, ep_codes, offset, queries):
+        # shapes inside shard_map: words (1, N_s, W), queries (B_l, d)
+        idx = DeviceIndex(chunk_words=words[0], centroids=cents,
+                          ep_ids=ep_ids[0], ep_codes=ep_codes[0])
+
+        def one_chunk(qc):
+            ids, d, hops = beam_search_device(
+                idx, qc, k=k, L=L, w=w, max_hops=max_hops, layout=layout,
+                metric=metric, backend=backend)
+            return ids, d
+
+        nq = queries.shape[0]
+        if query_chunk and nq > query_chunk:
+            nc = nq // query_chunk
+            ids, d = jax.lax.map(
+                one_chunk, queries.reshape(nc, query_chunk, -1))
+            ids, d = ids.reshape(nq, k), d.reshape(nq, k)
+        else:
+            ids, d = one_chunk(queries)
+        gids = jnp.where(ids >= 0, ids + offset[0], -1)
+        d = jnp.where(ids >= 0, d, jnp.inf)
+        # merge across shards: (S, B_l, k) -> top-k per query
+        all_ids = jax.lax.all_gather(gids, shard_axes, axis=0, tiled=False)
+        all_d = jax.lax.all_gather(d, shard_axes, axis=0, tiled=False)
+        S = all_ids.shape[0]
+        all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(queries.shape[0], S * k)
+        all_d = jnp.moveaxis(all_d, 0, 1).reshape(queries.shape[0], S * k)
+        negd, pos = jax.lax.top_k(-all_d, k)
+        return jnp.take_along_axis(all_ids, pos, axis=1), -negd
+
+    fn = shard_map(
+        local_search, mesh=mesh,
+        in_specs=(sspec, P(), P(shard_axes, None), P(shard_axes, None, None),
+                  P(shard_axes), qspec),
+        out_specs=(qspec, qspec),
+        check_rep=False)
+
+    def search(arrays: ShardedIndexArrays, queries: jax.Array):
+        return fn(arrays.chunk_words, arrays.centroids, arrays.ep_ids,
+                  arrays.ep_codes, arrays.offsets, queries)
+
+    return search
+
+
+def input_sharding(mesh, query_axes=("data",), shard_axes=("model",)):
+    """NamedShardings for placing ShardedIndexArrays + queries on the mesh."""
+    return ShardedIndexArrays(
+        chunk_words=NamedSharding(mesh, P(shard_axes, None, None)),
+        centroids=NamedSharding(mesh, P()),
+        ep_ids=NamedSharding(mesh, P(shard_axes, None)),
+        ep_codes=NamedSharding(mesh, P(shard_axes, None, None)),
+        offsets=NamedSharding(mesh, P(shard_axes)),
+    ), NamedSharding(mesh, P(query_axes, None))

@@ -1,0 +1,159 @@
+"""Vamana graph construction (DiskANN's build algorithm).
+
+Numpy orchestration with vectorized distance math — index *construction* is
+the offline/"training" phase of this paper's system; query-time code paths
+live in beam_search.py / aisaq_search.py / device_index.py.
+
+Faithful to Subramanya et al. (NeurIPS'19):
+  1. start from a random R-regular digraph, entry point = medoid
+  2. for each point p in random order: greedy-search(medoid -> p) collecting
+     the visited set V; N_out(p) = RobustPrune(p, V, alpha, R); add reverse
+     edges, pruning any node whose degree exceeds R
+  3. two passes: alpha=1.0 then alpha=cfg.alpha
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+def _dists(data: np.ndarray, q: np.ndarray, ids: np.ndarray, metric: str
+           ) -> np.ndarray:
+    sub = data[ids]
+    if metric == "mips":
+        return -(sub @ q)
+    diff = sub - q
+    return np.einsum("nd,nd->n", diff, diff)
+
+
+def medoid(data: np.ndarray, metric: str = "l2") -> int:
+    mean = data.mean(axis=0)
+    if metric == "mips":
+        return int(np.argmax(data @ mean))
+    d = ((data - mean) ** 2).sum(axis=1)
+    return int(np.argmin(d))
+
+
+def greedy_search(data: np.ndarray, graph: np.ndarray, q: np.ndarray,
+                  start: int, L: int, metric: str = "l2",
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (topL_ids, topL_dists, visited_ids_in_expansion_order)."""
+    cand_ids = np.array([start], dtype=np.int64)
+    cand_d = _dists(data, q, cand_ids, metric)
+    inserted = {start}
+    expanded: list[int] = []
+    expanded_set = set()
+    while True:
+        # closest unexpanded among top-L
+        order = np.argsort(cand_d, kind="stable")
+        cand_ids, cand_d = cand_ids[order][:L], cand_d[order][:L]
+        nxt = -1
+        for i in range(cand_ids.shape[0]):
+            if int(cand_ids[i]) not in expanded_set:
+                nxt = int(cand_ids[i])
+                break
+        if nxt < 0:
+            break
+        expanded.append(nxt)
+        expanded_set.add(nxt)
+        nbrs = graph[nxt]
+        nbrs = nbrs[nbrs >= 0]
+        fresh = np.array([v for v in nbrs if int(v) not in inserted],
+                         dtype=np.int64)
+        if fresh.size:
+            inserted.update(int(v) for v in fresh)
+            fd = _dists(data, q, fresh, metric)
+            cand_ids = np.concatenate([cand_ids, fresh])
+            cand_d = np.concatenate([cand_d, fd])
+    return cand_ids, cand_d, np.array(expanded, dtype=np.int64)
+
+
+def robust_prune(data: np.ndarray, p: int, cand: np.ndarray, alpha: float,
+                 R: int, metric: str = "l2") -> np.ndarray:
+    """RobustPrune: diversified neighbor selection. Returns <=R ids."""
+    cand = np.unique(cand)
+    cand = cand[cand != p]
+    if cand.size == 0:
+        return cand
+    d_p = _dists(data, data[p], cand, metric)
+    order = np.argsort(d_p, kind="stable")
+    cand, d_p = cand[order], d_p[order]
+    alive = np.ones(cand.size, dtype=bool)
+    out = []
+    for _ in range(R):
+        idx = np.flatnonzero(alive)
+        if idx.size == 0:
+            break
+        star = idx[0]
+        out.append(int(cand[star]))
+        alive[star] = False
+        rest = np.flatnonzero(alive)
+        if rest.size == 0:
+            break
+        d_star = _dists(data, data[cand[star]], cand[rest], metric)
+        # occlusion rule: drop v if alpha * d(p*, v) <= d(p, v)
+        alive[rest[alpha * d_star <= d_p[rest]]] = False
+    return np.array(out, dtype=np.int64)
+
+
+def build_vamana(data: np.ndarray, *, R: int, L: int, alpha: float = 1.2,
+                 metric: str = "l2", seed: int = 0, two_pass: bool = True,
+                 log_every: int = 0) -> np.ndarray:
+    """Returns adjacency (N, R) int32, -1 padded. data: (N, d)."""
+    data = np.ascontiguousarray(data, dtype=np.float32)
+    n = data.shape[0]
+    rng = np.random.default_rng(seed)
+    # random init graph
+    graph = np.full((n, R), -1, dtype=np.int32)
+    init_deg = min(R, max(1, min(R, n - 1)))
+    for i in range(n):
+        nb = rng.choice(n - 1, size=init_deg, replace=n - 1 < init_deg)
+        nb = nb + (nb >= i)          # skip self
+        graph[i, :init_deg] = nb
+    ep = medoid(data, metric)
+    passes = ([1.0, alpha] if two_pass else [alpha])
+    for a in passes:
+        order = rng.permutation(n)
+        for step, p in enumerate(order):
+            p = int(p)
+            _, _, _ = 0, 0, 0
+            topl, topd, expanded = greedy_search(data, graph, data[p], ep, L,
+                                                 metric)
+            cand = np.concatenate([expanded, graph[p][graph[p] >= 0]])
+            nbrs = robust_prune(data, p, cand, a, R, metric)
+            graph[p, :] = -1
+            graph[p, :nbrs.size] = nbrs
+            # reverse edges
+            for j in nbrs:
+                j = int(j)
+                row = graph[j]
+                if p in row:
+                    continue
+                slot = np.flatnonzero(row < 0)
+                if slot.size:
+                    row[slot[0]] = p
+                else:
+                    merged = np.concatenate([row[row >= 0], [p]])
+                    pruned = robust_prune(data, j, merged, a, R, metric)
+                    graph[j, :] = -1
+                    graph[j, :pruned.size] = pruned
+            if log_every and step % log_every == 0:
+                print(f"  vamana pass(alpha={a}) {step}/{n}", flush=True)
+    return graph
+
+
+def build_sharded(data: np.ndarray, n_shards: int, **kw):
+    """Paper Fig. 5: independent per-shard sub-indices over a dataset split.
+
+    Returns list of (global_id_offset, shard_data, shard_graph).
+    """
+    n = data.shape[0]
+    bounds = np.linspace(0, n, n_shards + 1).astype(int)
+    shards = []
+    for s in range(n_shards):
+        lo, hi = bounds[s], bounds[s + 1]
+        g = build_vamana(data[lo:hi], **kw)
+        shards.append((int(lo), data[lo:hi], g))
+    return shards

@@ -1,0 +1,118 @@
+"""Train-state container + train/serve step factories for every family."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.optim.adamw import OptState, make_optimizer, warmup_cosine
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def default_optimizer(total_steps: int = 10000, base_lr: float = 3e-4):
+    return make_optimizer(warmup_cosine(base_lr, min(2000, total_steps // 10),
+                                        total_steps))
+
+
+def make_loss_fn(arch: ArchConfig, shape: ShapeConfig) -> Callable:
+    fam = arch.family
+    if fam == "lm":
+        from repro.models.transformer import lm_loss
+        return lambda p, b: lm_loss(p, b, arch.model)
+    if fam == "gnn":
+        import os
+        from repro.models import gnn as G
+        if shape.kind == "gnn_minibatch":
+            return lambda p, b: G.gnn_minibatch_loss(p, b, arch.model)
+        if shape.kind == "gnn_batched":
+            return lambda p, b: G.gnn_batched_loss(p, b, arch.model)
+        if os.environ.get("REPRO_GNN") == "sharded":
+            # §Perf "gnn-part": locality-aware partitioned aggregation
+            from repro.distributed import act_sharding
+            from repro.models.gnn_sharded import sharded_full_loss_fn
+            mesh = act_sharding._MESH
+            if mesh is not None:
+                return sharded_full_loss_fn(mesh, arch.model, shape.n_nodes,
+                                            axes=tuple(mesh.axis_names))
+        return lambda p, b: G.gnn_full_loss(p, b, arch.model)
+    if fam == "recsys":
+        from repro.models.recsys import rec_loss
+        return lambda p, b: rec_loss(p, b, arch.model)
+    raise ValueError(fam)
+
+
+def make_train_step(arch: ArchConfig, shape: ShapeConfig, optimizer=None,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Grad DP all-reduce is implicit from sharding (params replicated over dp
+    axes). `microbatches` > 1 scans over batch slices accumulating fp32
+    grads — bounds activation residency AND amortizes the DP all-reduce to
+    once per step (compute/comm overlap lever, DESIGN.md §5)."""
+    loss_fn = make_loss_fn(arch, shape)
+    _, opt_update = optimizer or default_optimizer()
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(state: TrainState, batch: dict):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(state.params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc_step(carry, b):
+                g_acc, l_acc = carry
+                (loss, metrics), g = grads_of(state.params, b)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            (g_sum, l_sum), metrics = jax.lax.scan(
+                acc_step, (zeros, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+            loss = l_sum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        new_p, new_opt, stats = opt_update(grads, state.opt, state.params)
+        return TrainState(new_p, new_opt), {"loss": loss, **metrics, **stats}
+
+    return train_step
+
+
+def make_serve_step(arch: ArchConfig, shape: ShapeConfig) -> Callable:
+    fam = arch.family
+    if fam == "lm":
+        from repro.models import transformer as T
+        if shape.kind == "lm_prefill":
+            return lambda p, b: T.lm_prefill(p, b["tokens"], arch.model)
+        if shape.kind == "lm_decode":
+            def step(p, cache, b):
+                return T.lm_decode_step(p, cache, b["token"], b["pos"],
+                                        arch.model)
+            return step
+    if fam == "gnn":
+        from repro.models import gnn as G
+        if shape.kind == "gnn_full":
+            return lambda p, b: G.gnn_full_forward(p, b["feats"], b["edges"],
+                                                   arch.model)
+        if shape.kind == "gnn_batched":
+            return lambda p, b: G.gnn_batched_forward(p, b["feats"],
+                                                      b["edges"], arch.model)
+        return lambda p, b: G.gnn_minibatch_forward(p, b, arch.model)
+    if fam == "recsys":
+        from repro.models import recsys as R
+        if shape.kind == "rec_retrieval":
+            return lambda p, b: R.retrieval_topk(p, b, arch.model, k=100)
+        return lambda p, b: R.rec_forward(p, b, arch.model)
+    raise ValueError((fam, shape.kind))

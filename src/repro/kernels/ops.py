@@ -1,0 +1,80 @@
+"""jit'd public wrappers over the Pallas kernels with backend dispatch.
+
+backend:
+  "ref"               pure-jnp oracle (fast under XLA:CPU; default off-TPU)
+  "pallas_interpret"  Pallas kernel body executed in interpret mode (CPU
+                      validation — used by tests/test_kernels.py)
+  "pallas"            compiled Pallas (TPU target)
+  "auto"              pallas on TPU, ref elsewhere
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chunk_layout import ChunkLayout
+from repro.kernels import ref as _ref
+from repro.kernels.chunk_adc import fused_hop as _fused_hop_pallas
+from repro.kernels.pq_adc import pq_adc as _pq_adc_pallas
+from repro.kernels.pq_lut import pq_lut as _pq_lut_pallas
+from repro.kernels.rerank import rerank as _rerank_pallas
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(backend: str) -> str:
+    return default_backend() if backend == "auto" else backend
+
+
+def build_lut(queries: jax.Array, centroids: jax.Array, *, metric: str = "l2",
+              backend: str = "auto") -> jax.Array:
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.pq_lut_ref(queries, centroids, metric=metric)
+    return _pq_lut_pallas(queries, centroids, metric=metric,
+                          interpret=(b == "pallas_interpret"))
+
+
+def adc(lut: jax.Array, codes: jax.Array, *, backend: str = "auto"
+        ) -> jax.Array:
+    """lut (nq, m, ks) or (m, ks); codes (n, m) -> (nq, n) or (n,)."""
+    b = _resolve(backend)
+    if b == "ref":
+        if lut.ndim == 2:
+            return _ref.pq_adc_ref(lut, codes)
+        return jax.vmap(lambda l: _ref.pq_adc_ref(l, codes))(lut)
+    return _pq_adc_pallas(lut, codes, interpret=(b == "pallas_interpret"))
+
+
+def fused_hop(chunk_words: jax.Array, frontier_ids: jax.Array, lut: jax.Array,
+              queries: jax.Array, *, layout: ChunkLayout, metric: str = "l2",
+              backend: str = "auto"):
+    """Batched AiSAQ hop. frontier_ids (nq, w) -> see chunk_adc.fused_hop."""
+    b = _resolve(backend)
+    if b == "ref":
+        fn = functools.partial(_ref.fused_hop_ref, chunk_words,
+                               layout=layout, metric=metric)
+        return jax.vmap(fn)(frontier_ids, lut, queries)
+    return _fused_hop_pallas(chunk_words, frontier_ids, lut, queries,
+                             layout=layout, metric=metric,
+                             interpret=(b == "pallas_interpret"))
+
+
+def rerank(queries: jax.Array, cand: jax.Array, *, metric: str = "l2",
+           backend: str = "auto") -> jax.Array:
+    b = _resolve(backend)
+    if b == "ref":
+        if queries.ndim == 1:
+            return _ref.rerank_ref(queries, cand, metric=metric)
+        return jax.vmap(lambda q: _ref.rerank_ref(q, cand, metric=metric)
+                        )(queries)
+    return _rerank_pallas(queries, cand, metric=metric,
+                          interpret=(b == "pallas_interpret"))

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: bulk asymmetric distance computation (ADC).
+
+dist[n] = sum_j lut[j, codes[n, j]] for a tile of n codes.
+
+TPU adaptation (DESIGN.md §2): the CPU implementation is a scalar gather per
+(n, j); gathers serialize on the VPU, so we reformulate as a one-hot matmul —
+for each group of G subquantizers build the (bn, G, ks) one-hot of the codes
+and contract with the (G, ks) LUT slab on the MXU. ks=256 keeps lanes full.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adc_kernel(codes_ref, lut_ref, out_ref, *, group: int):
+    codes = codes_ref[...].astype(jnp.int32)          # (bn, m)
+    lut = lut_ref[0]                                  # (m, ks)
+    m, ks = lut.shape
+    bn = codes.shape[0]
+    acc = jnp.zeros((bn,), jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, ks), 2)
+    for g0 in range(0, m, group):                     # static unroll over m/G
+        cg = codes[:, g0:g0 + group]                  # (bn, G)
+        oh = (cg[:, :, None] == iota).astype(jnp.float32)   # (bn, G, ks)
+        lg = lut[g0:g0 + group]                       # (G, ks)
+        acc = acc + jax.lax.dot_general(
+            oh.reshape(bn, group * ks), lg.reshape(group * ks),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    out_ref[0, :] = acc
+
+
+def _adc_q8_kernel(codes_ref, lut_ref, scale_ref, out_ref, *, group: int):
+    """int8 ADC (§Perf "adc-int8"): one-hot s8 x LUT s8 -> s32 accumulate.
+
+    s8 x s8 -> s32 contractions run at 2x the bf16 MXU rate on TPU; the LUT
+    is symmetric-quantized per query against its global max-abs (scale in
+    SMEM-like scalar block), dequantized once per output tile."""
+    codes = codes_ref[...].astype(jnp.int32)          # (bn, m)
+    lut = lut_ref[0]                                  # (m, ks) int8
+    m, ks = lut.shape
+    bn = codes.shape[0]
+    acc = jnp.zeros((bn,), jnp.int32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, ks), 2)
+    for g0 in range(0, m, group):
+        cg = codes[:, g0:g0 + group]
+        oh = (cg[:, :, None] == iota).astype(jnp.int8)      # (bn, G, ks)
+        lg = lut[g0:g0 + group]
+        acc = acc + jax.lax.dot_general(
+            oh.reshape(bn, group * ks), lg.reshape(group * ks),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    out_ref[0, :] = acc.astype(jnp.float32) * scale_ref[0, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "group", "interpret"))
+def pq_adc_q8(lut: jax.Array, codes: jax.Array, *, block_n: int = 512,
+              group: int = 8, interpret: bool = False) -> jax.Array:
+    """int8-quantized ADC. lut (nq, m, ks) f32 -> distances (nq, n) f32.
+
+    Absolute error bound per distance: m * max|lut| / 127 (symmetric
+    per-query quantization); re-ranking with full-precision vectors absorbs
+    it (validated in tests/test_kernels.py + bench recall parity)."""
+    squeeze = lut.ndim == 2
+    if squeeze:
+        lut = lut[None]
+    nq, m, ks = lut.shape
+    n = codes.shape[0]
+    bn = min(block_n, n)
+    group = min(group, m)
+    scale = jnp.max(jnp.abs(lut), axis=(1, 2))               # (nq,)
+    lut_q = jnp.clip(jnp.round(lut / jnp.maximum(
+        scale[:, None, None], 1e-20) * 127.0), -127, 127).astype(jnp.int8)
+    out = pl.pallas_call(
+        functools.partial(_adc_q8_kernel, group=group),
+        grid=(nq, pl.cdiv(n, bn)),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda q, i: (i, 0)),
+            pl.BlockSpec((1, m, ks), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, 1), lambda q, i: (q, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda q, i: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((nq, n), jnp.float32),
+        interpret=interpret,
+    )(codes.astype(jnp.int32), lut_q, (scale / 127.0)[:, None])
+    return out[0] if squeeze else out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "group", "interpret"))
+def pq_adc(lut: jax.Array, codes: jax.Array, *, block_n: int = 512,
+           group: int = 8, interpret: bool = False) -> jax.Array:
+    """lut (nq, m, ks) f32, codes (n, m) u8/i32 -> (nq, n) f32."""
+    squeeze = lut.ndim == 2
+    if squeeze:
+        lut = lut[None]
+    nq, m, ks = lut.shape
+    n = codes.shape[0]
+    bn = min(block_n, n)
+    group = min(group, m)
+    assert m % group == 0
+    out = pl.pallas_call(
+        functools.partial(_adc_kernel, group=group),
+        grid=(nq, pl.cdiv(n, bn)),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda q, i: (i, 0)),
+            pl.BlockSpec((1, m, ks), lambda q, i: (q, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda q, i: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((nq, n), jnp.float32),
+        interpret=interpret,
+    )(codes.astype(jnp.int32), lut)
+    return out[0] if squeeze else out

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: per-query PQ distance LUT construction.
+
+Grid: (m, ceil(Q/bq)). Each program computes the (bq, ks) LUT tile for one
+subquantizer from a (bq, dsub) query slab and the (ks, dsub) centroid table —
+an MXU matmul with a norm epilogue. ks=256 is two native 128-lanes, and dsub
+(d/m) is the contraction dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_kernel(q_ref, c_ref, out_ref, *, metric: str):
+    q = q_ref[:, 0, :].astype(jnp.float32)        # (bq, dsub)
+    c = c_ref[0].astype(jnp.float32)              # (ks, dsub)
+    cross = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    if metric == "mips":
+        out_ref[:, 0, :] = -cross
+    else:
+        qn = jnp.sum(q * q, axis=-1, keepdims=True)       # (bq, 1)
+        cn = jnp.sum(c * c, axis=-1)[None, :]             # (1, ks)
+        out_ref[:, 0, :] = qn - 2.0 * cross + cn
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "block_q", "interpret"))
+def pq_lut(queries: jax.Array, centroids: jax.Array, *, metric: str = "l2",
+           block_q: int = 128, interpret: bool = False) -> jax.Array:
+    """(q, d) x (m, ks, dsub) -> (q, m, ks) f32 LUT."""
+    nq, d = queries.shape
+    m, ks, dsub = centroids.shape
+    assert m * dsub == d
+    bq = min(block_q, nq)
+    grid = (m, pl.cdiv(nq, bq))
+    # view queries as (q, m, dsub) so the j-th program reads its subspace slab
+    qs = queries.reshape(nq, m, dsub)
+    return pl.pallas_call(
+        functools.partial(_lut_kernel, metric=metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, 1, dsub), lambda j, i: (i, j, 0)),
+            pl.BlockSpec((1, ks, dsub), lambda j, i: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, 1, ks), lambda j, i: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, m, ks), jnp.float32),
+        interpret=interpret,
+    )(qs.reshape(nq, m, dsub), centroids).reshape(nq, m, ks)

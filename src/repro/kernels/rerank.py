@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: full-precision re-rank distances (query x candidates).
+
+Plain tiled matmul-with-epilogue; the contraction dim is the vector dim d.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rerank_kernel(q_ref, c_ref, out_ref, *, metric: str):
+    q = q_ref[...].astype(jnp.float32)                 # (1, d)
+    c = c_ref[...].astype(jnp.float32)                 # (bc, d)
+    cross = jax.lax.dot_general(c, q, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)[:, 0]
+    if metric == "mips":
+        out_ref[0, :] = -cross
+    else:
+        qn = jnp.sum(q * q)
+        cn = jnp.sum(c * c, axis=-1)
+        out_ref[0, :] = cn - 2.0 * cross + qn
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_c", "interpret"))
+def rerank(queries: jax.Array, cand: jax.Array, *, metric: str = "l2",
+           block_c: int = 1024, interpret: bool = False) -> jax.Array:
+    """(nq, d) x (c, d) -> (nq, c) f32 exact distances."""
+    squeeze = queries.ndim == 1
+    if squeeze:
+        queries = queries[None]
+    nq, d = queries.shape
+    c = cand.shape[0]
+    bc = min(block_c, c)
+    out = pl.pallas_call(
+        functools.partial(_rerank_kernel, metric=metric),
+        grid=(nq, pl.cdiv(c, bc)),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda q, i: (q, 0)),
+            pl.BlockSpec((bc, d), lambda q, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc), lambda q, i: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((nq, c), jnp.float32),
+        interpret=interpret,
+    )(queries.astype(jnp.float32), cand.astype(jnp.float32))
+    return out[0] if squeeze else out

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count at first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes; record memory analysis, HLO cost analysis, and collective bytes.
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch a --shape s]
+        [--multi-pod] [--force] [--out benchmarks/artifacts/dryrun]
+
+Each cell writes one JSON artifact; benchmarks/roofline.py consumes them.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(shape_str):
+        b = DTYPE_BYTES.get(dt, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the partitioned HLO.
+
+    Convention (EXPERIMENTS.md §Roofline): bytes = op OUTPUT size per device
+    per occurrence; `-done` ops are skipped (their `-start` was counted).
+    """
+    out = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2).lower()
+        out.setdefault(op, [0, 0])
+        out[op][0] += 1
+        out[op][1] += _shape_bytes(shape_str)
+    return {k: {"count": v[0], "bytes": v[1]} for k, v in out.items()}
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True, cp_attn: bool = False) -> dict:
+    from repro.distributed.act_sharding import set_policy
+    from repro.launch.inputs import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_policy(mesh, cp_attention=cp_attn)
+    t0 = time.time()
+    cell = build_cell(arch_id, shape_name, mesh)
+    jfn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                  out_shardings=cell.out_shardings,
+                  donate_argnums=cell.donate)
+    lowered = jfn.lower(*cell.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    rec = {"arch": arch_id, "shape": shape_name,
+           "mesh": list(mesh.shape.values()),
+           "mesh_axes": list(mesh.axis_names),
+           "n_devices": int(np.prod(list(mesh.shape.values()))),
+           "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+           "meta": {k: v for k, v in cell.meta.items()}}
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")
+            if hasattr(ma, k)}
+        print(f"  memory_analysis: {rec['memory']}")
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if k in ("flops", "bytes accessed", "transcendentals",
+                                "optimal_seconds")
+                       or k.startswith("bytes accessed")}
+        print(f"  cost_analysis flops={rec['cost'].get('flops'):.3e} "
+              f"bytes={rec['cost'].get('bytes accessed', 0):.3e}")
+    except Exception as e:  # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+
+    try:
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec["hlo_bytes"] = len(hlo)
+        tot = sum(v["bytes"] for v in rec["collectives"].values())
+        print(f"  collectives: {tot/1e6:.1f} MB "
+              f"{ {k: v['count'] for k, v in rec['collectives'].items()} }")
+    except Exception as e:  # pragma: no cover
+        rec["collectives"] = {"error": str(e)}
+    return rec
+
+
+ALL_CELLS = None
+
+
+def list_cells():
+    from repro.configs.registry import ASSIGNED_ARCHS, get_arch
+    cells = []
+    for aid in ASSIGNED_ARCHS:
+        arch = get_arch(aid)
+        for s in arch.shapes:
+            cells.append((aid, s.name, s.name in arch.skip_shapes))
+    # the paper's own architecture as extra cells
+    for aid in ("aisaq-sift1m", "aisaq-sift1b", "aisaq-kilt-e5"):
+        arch = get_arch(aid)
+        for s in arch.shapes:
+            cells.append((aid, s.name, False))
+    return cells
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--cp-attn", action="store_true",
+                    help="context-parallel attention (perf config)")
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix (perf iterations)")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = list_cells()
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+
+    failures = []
+    for multi_pod in meshes:
+        tag = ("pod2" if multi_pod else "pod1") + \
+            (f"__{args.tag}" if args.tag else "")
+        for arch_id, shape_name, skipped in cells:
+            path = os.path.join(args.out, f"{arch_id}__{shape_name}__{tag}.json")
+            if skipped:
+                from repro.configs.registry import get_arch
+                rec = {"arch": arch_id, "shape": shape_name, "mesh_tag": tag,
+                       "skipped": True,
+                       "reason": get_arch(arch_id).skip_reason}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[skip] {arch_id} x {shape_name}: documented skip")
+                continue
+            if os.path.exists(path) and not args.force:
+                print(f"[cached] {arch_id} x {shape_name} ({tag})")
+                continue
+            print(f"[dryrun] {arch_id} x {shape_name} ({tag}) ...", flush=True)
+            try:
+                rec = run_cell(arch_id, shape_name, multi_pod=multi_pod,
+                               cp_attn=args.cp_attn)
+                rec["mesh_tag"] = tag
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"  OK lower={rec['t_lower_s']}s "
+                      f"compile={rec['t_compile_s']}s", flush=True)
+            except Exception as e:
+                failures.append((arch_id, shape_name, tag, str(e)))
+                traceback.print_exc()
+                print(f"  FAIL {arch_id} x {shape_name}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f[:3], f[3][:200])
+        sys.exit(1)
+    print("\nall dry-run cells OK")
+
+
+if __name__ == "__main__":
+    main()

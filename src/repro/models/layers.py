@@ -1,0 +1,412 @@
+"""Shared NN layers: norms, RoPE, GQA attention (full / sliding / chunked),
+blockwise flash-style attention in pure jnp, SwiGLU MLP.
+
+Parameters are plain nested dicts; every init_* has a matching spec_* in
+repro/distributed/sharding.py giving its PartitionSpec.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncnorm_init(rng, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(rng, -2.0, 2.0, shape,
+                                                jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # (...,S,1,half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin],
+                           axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# attention masks
+# ---------------------------------------------------------------------------
+
+
+def _block_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+                window: int, chunked: bool) -> jax.Array:
+    """(bq,), (bk,) position vectors -> (bq, bk) bool allowed-mask."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= kp <= qp
+    if window > 0 and not chunked:
+        m &= qp - kp < window          # sliding window
+    if window > 0 and chunked:
+        m &= (qp // window) == (kp // window)   # llama4 local chunks
+    return m
+
+
+# ---------------------------------------------------------------------------
+# blockwise "flash" attention (pure jnp, O(S*block) memory)
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "chunked", "block_q", "block_kv",
+                     "skip_blocks"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    chunked: bool = False, block_q: int = 512,
+                    block_kv: int = 1024, q_offset: int = 0,
+                    skip_blocks: bool = True) -> jax.Array:
+    """Memory-efficient GQA attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KVH, hd) with H % KVH == 0.
+    Lazy-softmax scan over KV blocks per Q block; never materializes the
+    (Sq, Skv) score matrix. `skip_blocks` skips fully-masked KV blocks via a
+    dynamic-trip-count fori_loop (causal/banded block pruning).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = hd ** -0.5
+    nq = -(-Sq // block_q)
+    nk = -(-Skv // block_kv)
+    qpad, kpad = nq * block_q - Sq, nk * block_kv - Skv
+    qf = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    # GQA convention: q head h serves kv head h // G (kv-major layout)
+    qf = qf.reshape(B, nq, block_q, KVH, G, hd)
+    kf = kf.reshape(B, nk, block_kv, KVH, hd)
+    vf = vf.reshape(B, nk, block_kv, KVH, hd)
+
+    def q_block(qi):
+        qb = qf[:, qi]                                # (B, bq, KVH, G, hd)
+        qb = jnp.einsum("bqkgd->bkgqd", qb) * scale
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kb = kf[:, ki]                            # (B, bk, KVH, hd)
+            vb = vf[:, ki]
+            k_pos = ki * block_kv + jnp.arange(block_kv)
+            s = jnp.einsum("bkgqd,btkd->bkgqt", qb, kb,
+                           preferred_element_type=jnp.float32)
+            mask = _block_mask(q_pos, k_pos, causal=causal, window=window,
+                               chunked=chunked)
+            mask = mask & (k_pos < Skv)[None, :] & (q_pos < Sq + q_offset)[:, None]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            # fully-masked blocks: exp(NEG_INF - NEG_INF) = 1 — zero it out
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KVH, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, block_q, hd), jnp.float32)
+        if skip_blocks and causal and Sq == Skv and q_offset == 0:
+            # only kv blocks intersecting the allowed band contribute
+            hi = jnp.minimum(
+                (qi * block_q + block_q + block_kv - 1) // block_kv, nk)
+            lo = jnp.maximum(
+                0, (qi * block_q - (window - 1)) // block_kv) if window > 0 \
+                else jnp.int32(0)
+            if window > 0 and chunked:
+                lo = (qi * block_q) // window * window // block_kv
+
+            def body(i, carry):
+                c, _ = kv_step(carry, i)
+                return c
+            m1, l1, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+        else:
+            (m1, l1, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                            jnp.arange(nk))
+        out = acc / jnp.maximum(l1, 1e-30)[..., None]
+        return jnp.einsum("bkgqd->bqkgd", out)        # (B, bq, KVH, G, hd)
+
+    # remat each q block: backward recomputes the block's score tiles instead
+    # of saving the (B, H, bq, Skv) residuals of every block simultaneously
+    out = jax.lax.map(jax.checkpoint(q_block), jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * block_q, KVH, G, hd)
+    return out[:, :Sq].reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP flash attention (FA2-style): O(S) residuals, block-skipping in
+# BOTH passes (the backward is hand-written, so dynamic-trip-count loops are
+# fine). This is §Perf iteration "flash-vjp"; REPRO_FLASH=naive selects the
+# differentiated masked-scan baseline above.
+# ---------------------------------------------------------------------------
+
+
+def _band_bounds(qi: jax.Array, q_off, *, causal, window, chunked, block_q,
+                 block_kv, nk, Skv_valid):
+    """kv-block range [lo, hi) intersecting q block `qi`'s allowed band.
+
+    `q_off` is the GLOBAL position offset of this shard's q rows (context-
+    parallel attention shards the q sequence over the `model` axis)."""
+    q0 = qi * block_q + q_off
+    hi = jnp.minimum((q0 + block_q + block_kv - 1) // block_kv, nk)
+    if not causal:
+        hi = jnp.int32(nk)
+    lo = jnp.int32(0)
+    if window > 0 and not chunked:
+        lo = jnp.maximum(0, (q0 - (window - 1)) // block_kv)
+    if window > 0 and chunked:
+        lo = q0 // window * window // block_kv
+    return lo, hi
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def flash_attention_vjp(q, k, v, q_off, causal=True, window=0, chunked=False,
+                        block_q=512, block_kv=1024):
+    out, _ = _flash_fwd(q, k, v, q_off, causal, window, chunked, block_q,
+                        block_kv)
+    return out
+
+
+def _flash_body(q, k, v, q_off, causal, window, chunked, block_q, block_kv):
+    """Shared fwd: returns out (B,Sq,H,hd) and lse (B,KVH,G,nqb*bq).
+
+    q_off: scalar int — global offset of q row 0 (0 unless context-parallel).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = hd ** -0.5
+    nq, nk = -(-Sq // block_q), -(-Skv // block_kv)
+    qf = jnp.pad(q, ((0, 0), (0, nq * block_q - Sq), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, nk * block_kv - Skv), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, nk * block_kv - Skv), (0, 0), (0, 0)))
+    qf = qf.reshape(B, nq, block_q, KVH, G, hd)
+    kf = kf.reshape(B, nk, block_kv, KVH, hd)
+    vf = vf.reshape(B, nk, block_kv, KVH, hd)
+
+    def q_block(qi):
+        qb = jnp.einsum("bqkgd->bkgqd", qf[:, qi]) * scale
+        q_pos = q_off + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(ki, carry):
+            m_run, l_run, acc = carry
+            k_pos = ki * block_kv + jnp.arange(block_kv)
+            s = jnp.einsum("bkgqd,btkd->bkgqt", qb, kf[:, ki],
+                           preferred_element_type=jnp.float32)
+            mask = _block_mask(q_pos, k_pos, causal=causal, window=window,
+                               chunked=chunked)
+            mask &= (k_pos < Skv)[None, :] & \
+                (q_pos - q_off < Sq)[:, None]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vf.dtype),
+                            vf[:, ki], preferred_element_type=jnp.float32)
+            return m_new, l_new, acc * corr[..., None] + pv
+
+        m0 = jnp.full((B, KVH, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, block_q, hd), jnp.float32)
+        lo, hi = _band_bounds(qi, q_off, causal=causal, window=window,
+                              chunked=chunked, block_q=block_q,
+                              block_kv=block_kv, nk=nk, Skv_valid=Skv)
+        m1, l1, acc = jax.lax.fori_loop(lo, hi, kv_step, (m0, l0, a0))
+        o = acc / jnp.maximum(l1, 1e-30)[..., None]
+        lse = m1 + jnp.log(jnp.maximum(l1, 1e-30))
+        return jnp.einsum("bkgqd->bqkgd", o), lse
+
+    outs, lses = jax.lax.map(q_block, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * block_q, KVH, G, hd)
+    out = out[:, :Sq].reshape(B, Sq, H, hd).astype(q.dtype)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KVH, G, nq * block_q)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_off, causal, window, chunked, block_q, block_kv):
+    out, lse = _flash_body(q, k, v, q_off, causal, window, chunked, block_q,
+                           block_kv)
+    return out, (q, k, v, q_off, out, lse)
+
+
+def _flash_bwd(causal, window, chunked, block_q, block_kv, res, dout):
+    q, k, v, q_off, out, lse = res
+    B, Sq, H, hd = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    scale = hd ** -0.5
+    nq, nk = -(-Sq // block_q), -(-Skv // block_kv)
+    qf = jnp.pad(q, ((0, 0), (0, nq * block_q - Sq), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, nk * block_kv - Skv), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, nk * block_kv - Skv), (0, 0), (0, 0)))
+    dof = jnp.pad(dout.astype(jnp.float32),
+                  ((0, 0), (0, nq * block_q - Sq), (0, 0), (0, 0)))
+    of = jnp.pad(out.astype(jnp.float32),
+                 ((0, 0), (0, nq * block_q - Sq), (0, 0), (0, 0)))
+    qf = qf.reshape(B, nq, block_q, KVH, G, hd)
+    kf = kf.reshape(B, nk, block_kv, KVH, hd)
+    vf = vf.reshape(B, nk, block_kv, KVH, hd)
+    # (B, nq, bq, KVH, G, hd) -> (B, KVH, G, nq, bq, hd)
+    dof = jnp.transpose(dof.reshape(B, nq, block_q, KVH, G, hd),
+                        (0, 3, 4, 1, 2, 5))
+    of = jnp.transpose(of.reshape(B, nq, block_q, KVH, G, hd),
+                       (0, 3, 4, 1, 2, 5))
+    # D_i = rowsum(dout * out)  (B,KVH,G,nq,bq)
+    Drow = jnp.sum(dof * of, axis=-1)
+    lse_b = lse.reshape(B, KVH, G, nq, block_q)
+
+    def q_block(carry, qi):
+        dk_acc, dv_acc = carry
+        qb = jnp.einsum("bqkgd->bkgqd", qf[:, qi]).astype(jnp.float32) * scale
+        dob = dof[:, :, :, qi]                      # (B,KVH,G,bq,hd)
+        Db = Drow[:, :, :, qi]                      # (B,KVH,G,bq)
+        lseb = lse_b[:, :, :, qi]
+        q_pos = q_off + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(ki, carry2):
+            dq_b, dk_acc, dv_acc = carry2
+            k_pos = ki * block_kv + jnp.arange(block_kv)
+            s = jnp.einsum("bkgqd,btkd->bkgqt", qb, kf[:, ki],
+                           preferred_element_type=jnp.float32)
+            mask = _block_mask(q_pos, k_pos, causal=causal, window=window,
+                               chunked=chunked)
+            mask &= (k_pos < Skv)[None, :] & \
+                (q_pos - q_off < Sq)[:, None]
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lseb[..., None]), 0.0)
+            dv_blk = jnp.einsum("bkgqt,bkgqd->btkd", p, dob)
+            dp = jnp.einsum("bkgqd,btkd->bkgqt", dob, vf[:, ki],
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - Db[..., None])           # (B,KVH,G,bq,bkv)
+            dq_b = dq_b + jnp.einsum("bkgqt,btkd->bkgqd", ds, kf[:, ki],
+                                     preferred_element_type=jnp.float32)
+            dk_blk = jnp.einsum("bkgqt,bkgqd->btkd", ds, qb)
+            dk_acc = jax.lax.dynamic_update_index_in_dim(
+                dk_acc, dk_acc[ki] + dk_blk, ki, axis=0)
+            dv_acc = jax.lax.dynamic_update_index_in_dim(
+                dv_acc, dv_acc[ki] + dv_blk, ki, axis=0)
+            return dq_b, dk_acc, dv_acc
+
+        lo, hi = _band_bounds(qi, q_off, causal=causal, window=window,
+                              chunked=chunked, block_q=block_q,
+                              block_kv=block_kv, nk=nk, Skv_valid=Skv)
+        dq0 = jnp.zeros((B, KVH, G, block_q, hd), jnp.float32)
+        dq_b, dk_acc, dv_acc = jax.lax.fori_loop(
+            lo, hi, kv_step, (dq0, dk_acc, dv_acc))
+        return (dk_acc, dv_acc), jnp.einsum("bkgqd->bqkgd", dq_b) * scale
+
+    dkv0 = (jnp.zeros((nk, B, block_kv, KVH, hd), jnp.float32),
+            jnp.zeros((nk, B, block_kv, KVH, hd), jnp.float32))
+    (dk_acc, dv_acc), dq_blocks = jax.lax.scan(q_block, dkv0,
+                                               jnp.arange(nq))
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(B, nq * block_q, KVH, G, hd)
+    dq = dq[:, :Sq].reshape(B, Sq, H, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dk_acc, 0, 1).reshape(B, nk * block_kv, KVH, hd)
+    dk = dk[:, :Skv].astype(k.dtype)
+    dv = jnp.moveaxis(dv_acc, 0, 1).reshape(B, nk * block_kv, KVH, hd)
+    dv = dv[:, :Skv].astype(v.dtype)
+    return dq, dk, dv, None
+
+
+flash_attention_vjp.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "chunked"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *, window: int = 0,
+                     chunked: bool = False) -> jax.Array:
+    """Single-token decode. q: (B, 1, H, hd); caches: (B, T, KVH, hd).
+
+    Works with the cache sharded over its T dim (sequence-parallel decode):
+    GSPMD inserts the max/sum all-reduces for the softmax automatically.
+    """
+    B, _, H, hd = q.shape
+    _, T, KVH, _ = k_cache.shape
+    G = H // KVH
+    qr = q.reshape(B, KVH, G, hd) * hd ** -0.5
+    s = jnp.einsum("bkgd,btkd->bkgt", qr, k_cache,
+                   preferred_element_type=jnp.float32)
+    pos = jnp.arange(T)
+    qpos = cache_len - 1                                 # position of new token
+    ok = pos[None, :] < cache_len[:, None]
+    if window > 0 and not chunked:
+        ok &= qpos[:, None] - pos[None, :] < window
+    if window > 0 and chunked:
+        ok &= (pos[None, :] // window) == (qpos[:, None] // window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mlp
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(rng, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "w_gate": truncnorm_init(k1, (d_model, d_ff), s_in, dtype),
+        "w_up": truncnorm_init(k2, (d_model, d_ff), s_in, dtype),
+        "w_down": truncnorm_init(k3, (d_ff, d_model), s_out, dtype),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["w_gate"])
+    return ((g * (x @ p["w_up"])) @ p["w_down"]).astype(x.dtype)
+
+
+def init_dense(rng, shape, dtype, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return truncnorm_init(rng, shape, scale, dtype)
+
+
+def mlp_stack(rng, dims, dtype):
+    """[(d0->d1), (d1->d2), ...] relu MLP params."""
+    keys = jax.random.split(rng, len(dims) - 1)
+    return [{"w": init_dense(k, (dims[i], dims[i + 1]), dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i, k in enumerate(keys)]
+
+
+def mlp_apply(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,223 @@
+"""RecSys models: DLRM, DCN-v2, Wide&Deep, SASRec + EmbeddingBag.
+
+JAX has no nn.EmbeddingBag — `embedding_bag` below is jnp.take +
+reduction (DESIGN.md §3), and the huge tables are row-sharded over the
+`model` axis (vocab padded to a shardable multiple at init; configs keep the
+true published cardinalities).
+
+The `retrieval_cand` regime (1 query x 1M candidates) supports two scoring
+backends:
+  * exact  — user tower dot candidate embeddings (baseline),
+  * pq     — the paper's technique: ADC over PQ codes of the candidate
+             embeddings + full-precision re-rank of the top candidates
+             (AiSAQ-style storage-tier candidate store).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.models.layers import init_dense, mlp_apply, mlp_stack, truncnorm_init
+
+VOCAB_PAD = 2048  # pad table rows so any mesh axis up to 2048 shards evenly
+
+
+def padded_vocab(v: int) -> int:
+    return max(VOCAB_PAD, (v + VOCAB_PAD - 1) // VOCAB_PAD * VOCAB_PAD)
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, combiner: str = "sum"
+                  ) -> jax.Array:
+    """table (V, D), idx (..., hot) int -> (..., D)."""
+    e = jnp.take(table, idx, axis=0)            # (..., hot, D)
+    if combiner == "sum":
+        return e.sum(axis=-2)
+    if combiner == "mean":
+        return e.mean(axis=-2)
+    raise ValueError(combiner)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_recsys(rng: jax.Array, cfg: RecsysConfig) -> dict:
+    keys = jax.random.split(rng, cfg.n_sparse + 8)
+    D = cfg.embed_dim
+    p: dict = {"tables": [
+        truncnorm_init(keys[i], (padded_vocab(v), D), 0.05, jnp.float32)
+        for i, v in enumerate(cfg.vocab_sizes)]}
+    kk = keys[cfg.n_sparse:]
+    if cfg.kind == "dlrm":
+        p["bot"] = mlp_stack(kk[0], (cfg.n_dense,) + cfg.bot_mlp, jnp.float32)
+        n_f = cfg.n_sparse + 1
+        d_int = n_f * (n_f - 1) // 2 + cfg.bot_mlp[-1]
+        p["top"] = mlp_stack(kk[1], (d_int,) + cfg.top_mlp, jnp.float32)
+    elif cfg.kind == "dcnv2":
+        d0 = cfg.n_dense + cfg.n_sparse * D
+        p["cross"] = [{"w": init_dense(k, (d0, d0), jnp.float32),
+                       "b": jnp.zeros((d0,), jnp.float32)}
+                      for k in jax.random.split(kk[0], cfg.n_cross_layers)]
+        p["mlp"] = mlp_stack(kk[1], (d0,) + cfg.mlp + (1,), jnp.float32)
+    elif cfg.kind == "widedeep":
+        p["wide"] = [
+            truncnorm_init(k, (padded_vocab(v), 1), 0.01, jnp.float32)
+            for k, v in zip(jax.random.split(kk[0], cfg.n_sparse),
+                            cfg.vocab_sizes)]
+        p["mlp"] = mlp_stack(kk[1], (cfg.n_sparse * D,) + cfg.mlp + (1,),
+                             jnp.float32)
+    elif cfg.kind == "sasrec":
+        S, H = cfg.seq_len, cfg.n_heads
+        p["pos"] = truncnorm_init(kk[0], (S, D), 0.05, jnp.float32)
+        blocks = []
+        for k in jax.random.split(kk[1], cfg.n_blocks):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            blocks.append({
+                "wq": init_dense(k1, (D, D), jnp.float32),
+                "wk": init_dense(k2, (D, D), jnp.float32),
+                "wv": init_dense(k3, (D, D), jnp.float32),
+                "ln1": jnp.ones((D,), jnp.float32),
+                "ln2": jnp.ones((D,), jnp.float32),
+                "ff": mlp_stack(k4, (D, D, D), jnp.float32),
+            })
+        p["blocks"] = blocks
+    else:
+        raise ValueError(cfg.kind)
+    # retrieval tower: project item embeddings into the user space
+    p["item_proj"] = init_dense(kk[4], (D, D), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forwards
+# ---------------------------------------------------------------------------
+
+
+def _sparse_embs(p, batch, cfg) -> jax.Array:
+    """-> (B, n_sparse, D)."""
+    embs = [embedding_bag(t, batch["sparse"][:, i, :])
+            for i, t in enumerate(p["tables"])]
+    return jnp.stack(embs, axis=1)
+
+
+def rec_forward(p: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """CTR forward -> logits (B,). batch: dense (B,nd) f32, sparse (B,ns,hot)."""
+    if cfg.kind == "dlrm":
+        d = mlp_apply(p["bot"], batch["dense"], final_act=True)   # (B, D)
+        s = _sparse_embs(p, batch, cfg)                            # (B, ns, D)
+        z = jnp.concatenate([d[:, None, :], s], axis=1)            # (B, F, D)
+        zz = jnp.einsum("bfd,bgd->bfg", z, z)
+        f = z.shape[1]
+        iu, ju = jnp.triu_indices(f, k=1)
+        inter = zz[:, iu, ju]                                      # (B, F(F-1)/2)
+        return mlp_apply(p["top"], jnp.concatenate([d, inter], -1))[:, 0]
+    if cfg.kind == "dcnv2":
+        s = _sparse_embs(p, batch, cfg).reshape(batch["sparse"].shape[0], -1)
+        x0 = jnp.concatenate([batch["dense"], s], axis=-1)
+        x = x0
+        for c in p["cross"]:
+            x = x0 * (x @ c["w"] + c["b"]) + x                     # DCNv2 cross
+        return mlp_apply(p["mlp"], x)[:, 0]
+    if cfg.kind == "widedeep":
+        s = _sparse_embs(p, batch, cfg)
+        deep = mlp_apply(p["mlp"], s.reshape(s.shape[0], -1))[:, 0]
+        wide = sum(embedding_bag(w, batch["sparse"][:, i, :])[:, 0]
+                   for i, w in enumerate(p["wide"]))
+        return deep + wide
+    if cfg.kind == "sasrec":
+        h = sasrec_hidden(p, batch["seq"], cfg)                    # (B, S, D)
+        tgt = jnp.take(p["tables"][0], batch["target"], axis=0)    # (B, D)
+        return jnp.einsum("bd,bd->b", h[:, -1], tgt)
+    raise ValueError(cfg.kind)
+
+
+def sasrec_hidden(p: dict, seq: jax.Array, cfg: RecsysConfig) -> jax.Array:
+    B, S = seq.shape
+    D = cfg.embed_dim
+    x = jnp.take(p["tables"][0], seq, axis=0) + p["pos"][None, :S]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    for b in p["blocks"]:
+        xn = _ln(x, b["ln1"])
+        q, k, v = xn @ b["wq"], xn @ b["wk"], xn @ b["wv"]
+        s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(D)
+        s = jnp.where(mask[None], s, -1e30)
+        x = x + jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, axis=-1), v)
+        x = x + mlp_apply(b["ff"], _ln(x, b["ln2"]))
+    return x
+
+
+def _ln(x, scale, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale
+
+
+def rec_loss(p: dict, batch: dict, cfg: RecsysConfig):
+    if cfg.kind == "sasrec":
+        # next-item BCE with one sampled negative per position (paper §3.4)
+        h = sasrec_hidden(p, batch["seq"], cfg)                    # (B, S, D)
+        pos = jnp.take(p["tables"][0], batch["pos_items"], axis=0)
+        neg = jnp.take(p["tables"][0], batch["neg_items"], axis=0)
+        sp = jnp.einsum("bsd,bsd->bs", h, pos)
+        sn = jnp.einsum("bsd,bsd->bs", h, neg)
+        m = batch["seq_mask"]
+        loss = -(jnp.log(jax.nn.sigmoid(sp) + 1e-9)
+                 + jnp.log(1 - jax.nn.sigmoid(sn) + 1e-9))
+        loss = (loss * m).sum() / jnp.maximum(m.sum(), 1.0)
+        return loss, {"pos_score": (sp * m).sum() / jnp.maximum(m.sum(), 1.0)}
+    logits = rec_forward(p, batch, cfg)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, {"mean_logit": logits.mean()}
+
+
+# ---------------------------------------------------------------------------
+# retrieval scoring (the paper's regime)
+# ---------------------------------------------------------------------------
+
+
+def user_tower(p: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """-> (B, D) user representation for retrieval."""
+    if cfg.kind == "sasrec":
+        return sasrec_hidden(p, batch["seq"], cfg)[:, -1]
+    if cfg.kind == "dlrm":
+        return mlp_apply(p["bot"], batch["dense"], final_act=True) + \
+            _sparse_embs(p, batch, cfg).mean(axis=1)
+    # dcnv2 / widedeep: mean-pooled sparse embeddings as the query vector
+    return _sparse_embs(p, batch, cfg).mean(axis=1)
+
+
+def retrieval_scores(p: dict, batch: dict, cfg: RecsysConfig) -> jax.Array:
+    """Exact scoring: (B, n_cand). Candidates = rows of table 0, projected."""
+    u = user_tower(p, batch, cfg)                                 # (B, D)
+    cand = jnp.take(p["tables"][0], batch["cand_ids"], axis=0)    # (C, D)
+    return jnp.einsum("bd,cd->bc", u, cand @ p["item_proj"])
+
+
+def retrieval_topk(p: dict, batch: dict, cfg: RecsysConfig, k: int = 100):
+    s = retrieval_scores(p, batch, cfg)
+    vals, idx = jax.lax.top_k(s, k)
+    return jnp.take(batch["cand_ids"], idx, axis=0), vals
+
+
+def retrieval_topk_pq(p: dict, batch: dict, cfg: RecsysConfig,
+                      pq_codes: jax.Array, centroids: jax.Array,
+                      k: int = 100, rerank_mult: int = 4):
+    """AiSAQ-mode retrieval: ADC over PQ codes of (projected) candidate
+    embeddings, then exact re-rank of the top k*rerank_mult."""
+    from repro.kernels import ops
+    u = user_tower(p, batch, cfg)                                 # (B, D)
+    lut = ops.build_lut(u, centroids, metric="mips")
+    d_pq = ops.adc(lut, pq_codes)                                 # (B, C)
+    _, pre = jax.lax.top_k(-d_pq, k * rerank_mult)
+    cand = jnp.take(p["tables"][0], pre[0], axis=0) @ p["item_proj"]
+    exact = jnp.einsum("d,cd->c", u[0], cand)
+    vals, idx = jax.lax.top_k(exact, k)
+    return jnp.take(pre[0], idx, axis=0)[None], vals[None]

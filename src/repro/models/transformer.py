@@ -1,0 +1,314 @@
+"""Decoder-only LM: dense or MoE, full/sliding/chunked-global attention.
+
+Layout decisions that matter at scale:
+  * layer params are stacked (L, ...) and the forward is a lax.scan over
+    layers -> HLO stays O(1) in depth (compile time on 512-way SPMD).
+  * remat (jax.checkpoint) wraps the scan body.
+  * the LM loss is computed in sequence chunks (scan) so the (B, S, V)
+    logits tensor is never materialized — V=150k-200k vocabs make the full
+    tensor 10s of GB at 4k sequence.
+  * decode keeps a (L, B, T, KVH, hd) KV cache, updated inside the layer
+    scan; the T dim may be sharded over the `model` axis (SP decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import os as _os
+
+from repro.configs.base import LMConfig
+from repro.distributed.act_sharding import constrain
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_apply, moe_apply_ep
+
+
+def _moe_fn():
+    """Global-dispatch (GSPMD) vs explicit shard_map EP (REPRO_MOE=ep)."""
+    return moe_apply_ep if _os.environ.get("REPRO_MOE") == "ep" \
+        else moe_apply
+
+
+def _dt(cfg: LMConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(rng: jax.Array, cfg: LMConfig, *, ep: int = 1) -> dict:
+    """ep: size of the expert-parallel axis (experts padded to multiple)."""
+    dt = _dt(cfg)
+    k_e, k_l, k_h = jax.random.split(rng, 3)
+    D, Hhd, KVhd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+
+    def init_layer(k):
+        ks = jax.random.split(k, 8)
+        s = D ** -0.5
+        attn = {
+            "w_q": L.truncnorm_init(ks[0], (D, Hhd), s, dt),
+            "w_k": L.truncnorm_init(ks[1], (D, KVhd), s, dt),
+            "w_v": L.truncnorm_init(ks[2], (D, KVhd), s, dt),
+            "w_o": L.truncnorm_init(ks[3], (Hhd, D), Hhd ** -0.5, dt),
+        }
+        if cfg.qkv_bias:
+            attn["b_q"] = jnp.zeros((Hhd,), dt)
+            attn["b_k"] = jnp.zeros((KVhd,), dt)
+            attn["b_v"] = jnp.zeros((KVhd,), dt)
+        if cfg.qk_norm:
+            attn["q_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+            attn["k_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p = {"attn": attn,
+             "ln1": jnp.ones((D,), jnp.float32),
+             "ln2": jnp.ones((D,), jnp.float32)}
+        if cfg.moe is None:
+            p["ffn"] = L.init_swiglu(ks[4], D, cfg.d_ff, dt)
+        else:
+            n_pad = cfg.moe.padded_experts(ep) - cfg.moe.n_experts
+            p["moe"] = init_moe(ks[5], D, cfg.moe, dt, n_pad_experts=n_pad)
+        return p
+
+    params = {
+        "embed": L.truncnorm_init(k_e, (cfg.vocab_size, D), 0.02, dt),
+        "layers": jax.vmap(init_layer)(jax.random.split(k_l, cfg.n_layers)),
+        "final_norm": jnp.ones((D,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.truncnorm_init(k_h, (D, cfg.vocab_size),
+                                             D ** -0.5, dt)
+    return params
+
+
+def _is_global_layer(cfg: LMConfig, li: jax.Array) -> jax.Array:
+    """llama4 iRoPE: every `global_every`-th layer attends globally (NoPE)."""
+    return (li % cfg.global_every) == (cfg.global_every - 1)
+
+
+# ---------------------------------------------------------------------------
+# attention wrapper (one layer)
+# ---------------------------------------------------------------------------
+
+
+def _attn(p: dict, x: jax.Array, cfg: LMConfig, *, positions: jax.Array,
+          li: jax.Array, cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+          cache_pos: Optional[jax.Array] = None, train: bool = False):
+    # dynamic-trip-count block skipping is not reverse-differentiable:
+    # training takes the masked full scan (see EXPERIMENTS.md §Perf for the
+    # custom-VJP flash iteration), inference skips out-of-band blocks.
+    skip = not train
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = constrain(q.reshape(B, S, H, hd), "qkv")
+    k = constrain(k.reshape(B, S, KVH, hd), "qkv")
+    v = constrain(v.reshape(B, S, KVH, hd), "qkv")
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    glob = _is_global_layer(cfg, li) if cfg.attention == "chunked_global" \
+        else jnp.array(False)
+
+    def roped(qk):
+        qq, kk = qk
+        return (L.rope(qq, positions, cfg.rope_theta),
+                L.rope(kk, positions, cfg.rope_theta))
+
+    if cfg.attention == "chunked_global":
+        # global layers are NoPE (llama4): skip rope there
+        q, k = jax.lax.cond(glob, lambda qk: qk, roped, (q, k))
+    else:
+        q, k = roped((q, k))
+
+    if cache is None:
+        import os as _os
+        from repro.distributed.act_sharding import cp_attention_wrap
+        use_vjp = train and _os.environ.get("REPRO_FLASH", "vjp") == "vjp"
+
+        def attend(qkv, window=0, chunked=False):
+            def fn(qq, kk, vv, off):
+                # adapt block sizes: CP shards may hold < 512 q rows
+                bq = min(512, qq.shape[1])
+                bk = min(1024, kk.shape[1])
+                return L.flash_attention_vjp(qq, kk, vv, off, True, window,
+                                             chunked, bq, bk)
+            # context-parallel attention: q sequence sharded over `model`
+            # (§Perf "cp-attn"); applies to train AND prefill
+            cp = cp_attention_wrap(fn, qkv[0].shape[1])
+            if cp is not None:
+                return cp(*qkv)
+            if use_vjp:
+                # custom-VJP flash: O(S) residuals + block skipping in both
+                # passes (EXPERIMENTS.md §Perf "flash-vjp")
+                return fn(*qkv, jnp.int32(0))
+            return L.flash_attention(qkv[0], qkv[1], qkv[2], causal=True,
+                                     window=window, chunked=chunked,
+                                     skip_blocks=skip)
+
+        if cfg.attention == "full":
+            o = attend((q, k, v))
+        elif cfg.attention == "sliding":
+            o = attend((q, k, v), window=cfg.window)
+        else:  # chunked_global
+            o = jax.lax.cond(
+                glob,
+                lambda qkv: attend(qkv),
+                lambda qkv: attend(qkv, window=cfg.window, chunked=True),
+                (q, k, v))
+        new_cache = None
+    else:
+        kc, vc = cache                                   # (B, T, KVH, hd)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, cache_pos, 0, 0))
+        clen = jnp.full((B,), cache_pos + 1, jnp.int32)
+        if cfg.attention == "full":
+            o = L.decode_attention(q, kc, vc, clen)
+        elif cfg.attention == "sliding":
+            o = L.decode_attention(q, kc, vc, clen, window=cfg.window)
+        else:
+            o = jax.lax.cond(
+                glob,
+                lambda a: L.decode_attention(a[0], a[1], a[2], clen),
+                lambda a: L.decode_attention(a[0], a[1], a[2], clen,
+                                             window=cfg.window, chunked=True),
+                (q, kc, vc))
+        new_cache = (kc, vc)
+    out = o.reshape(B, S, H * hd) @ p["w_o"]
+    return constrain(out.astype(x.dtype), "hidden"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward / loss / decode
+# ---------------------------------------------------------------------------
+
+
+def lm_hidden(params: dict, tokens: jax.Array, cfg: LMConfig, *,
+              train: bool = False) -> tuple:
+    """(B, S) -> final hidden states (B, S, D) + total aux loss."""
+    x = constrain(params["embed"][tokens].astype(_dt(cfg)), "hidden")
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def block(carry, scanned):
+        x, aux = carry
+        lp, li = scanned
+        h, _ = _attn(lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+                     positions=positions, li=li, train=train)
+        x = constrain(x + h, "hidden")
+        y = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            f = L.swiglu(lp["ffn"], y)
+            a = jnp.float32(0)
+        else:
+            f, a = _moe_fn()(lp["moe"], y.reshape(B * S, D), cfg.moe,
+                             n_pad_experts=lp["moe"]["router"].shape[-1]
+                             - cfg.moe.n_experts)
+            f = f.reshape(B, S, D)
+        return (constrain(x + f, "hidden"), aux + a), None
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.float32(0)),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def _unembed(params: dict, cfg: LMConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def chunked_xent(hidden: jax.Array, w_out: jax.Array, labels: jax.Array,
+                 *, chunk: int = 512) -> jax.Array:
+    """Mean token cross-entropy without materializing (B, S, V) logits."""
+    B, S, D = hidden.shape
+    nc = max(1, S // chunk)
+    hc = hidden.reshape(B, nc, S // nc, D).swapaxes(0, 1)
+    lc = labels.reshape(B, nc, S // nc).swapaxes(0, 1)
+
+    def one(chunk_in):
+        h, lab = chunk_in
+        logits = constrain((h @ w_out).astype(jnp.float32), "logits_v")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return (lse - gold).sum()
+
+    # remat: never keep a chunk's (B, c, V) logits as backward residuals
+    tot = jax.lax.map(jax.checkpoint(one), (hc, lc)).sum()
+    return tot / (B * S)
+
+
+def lm_loss(params: dict, batch: dict, cfg: LMConfig) -> tuple:
+    """batch: {'tokens': (B,S), 'labels': (B,S)} -> (loss, metrics)."""
+    hidden, aux = lm_hidden(params, batch["tokens"], cfg, train=True)
+    xent = chunked_xent(hidden, _unembed(params, cfg), batch["labels"])
+    return xent + aux, {"xent": xent, "aux": aux}
+
+
+def lm_prefill(params: dict, tokens: jax.Array, cfg: LMConfig) -> jax.Array:
+    """Prefill forward -> next-token logits at the last position (B, V)."""
+    hidden, _ = lm_hidden(params, tokens, cfg)
+    return (hidden[:, -1] @ _unembed(params, cfg)).astype(jnp.float32)
+
+
+class DecodeCache(NamedTuple):
+    k: jax.Array          # (L, B, T, KVH, hd)
+    v: jax.Array
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None
+               ) -> DecodeCache:
+    dt = dtype or _dt(cfg)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return DecodeCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def lm_decode_step(params: dict, cache: DecodeCache, token: jax.Array,
+                   pos: jax.Array, cfg: LMConfig):
+    """One decode step. token: (B,) int32; pos: scalar int32 (append index).
+
+    Returns (logits (B, V) f32, updated cache).
+    """
+    x = params["embed"][token][:, None, :].astype(_dt(cfg))   # (B, 1, D)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    # the cache rides in the CARRY (not xs/ys): scan xs->ys stacking double-
+    # buffers the (L,B,T,KVH,hd) array, which alone blew the decode memory
+    # budget at 500k context; carried buffers update in place.
+    def block(carry, scanned):
+        x, kfull, vfull = carry
+        lp, li = scanned
+        kc = jax.lax.dynamic_index_in_dim(kfull, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vfull, li, 0, keepdims=False)
+        h, new_cache = _attn(lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+                             cfg, positions=positions, li=li,
+                             cache=(kc, vc), cache_pos=pos)
+        kfull = jax.lax.dynamic_update_index_in_dim(kfull, new_cache[0], li, 0)
+        vfull = jax.lax.dynamic_update_index_in_dim(vfull, new_cache[1], li, 0)
+        x = x + h
+        y = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is None:
+            f = L.swiglu(lp["ffn"], y)
+        else:
+            f, _ = _moe_fn()(lp["moe"], y.reshape(B, -1), cfg.moe,
+                             n_pad_experts=lp["moe"]["router"].shape[-1]
+                             - cfg.moe.n_experts)
+            f = f.reshape(B, 1, -1)
+        return (x + f, kfull, vfull), None
+
+    (x, nk, nv), _ = jax.lax.scan(
+        block, (x, cache.k, cache.v),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ _unembed(params, cfg)).astype(jnp.float32)
+    return logits, DecodeCache(nk, nv)

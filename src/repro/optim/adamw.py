@@ -1,0 +1,125 @@
+"""Optimizers: AdamW (fp32 master) + row-wise Adagrad for huge embeddings,
+selected per-parameter by tree path. Global-norm clipping, warmup-cosine LR.
+
+Row-wise Adagrad keeps ONE accumulator scalar per embedding row (the
+industry-standard memory trick for 1e8-row tables: state is V floats, not
+V*D), making the recsys train_step fit the per-device HBM budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any           # AdamW 1st moment  (zeros-like for adagrad params)
+    v: Any           # AdamW 2nd moment / adagrad row accumulator
+    master: Any      # fp32 master copy (None leaves if param already fp32)
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5
+                         * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def _is_embedding(path: str) -> bool:
+    return "tables" in path or path.endswith("embed") or "/wide/" in path
+
+
+def _path_tree(tree):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in kp) for kp, _ in paths]
+    return jax.tree_util.tree_unflatten(treedef, names)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def make_optimizer(lr_fn: Callable, *, b1: float = 0.9, b2: float = 0.95,
+                   eps: float = 1e-8, weight_decay: float = 0.1,
+                   clip_norm: float = 1.0,
+                   embedding_rule: str = "row_adagrad"):
+    """Returns (init_fn(params) -> OptState, update_fn(grads, state, params)
+    -> (new_params, new_state, stats))."""
+
+    def rule_for(path: str) -> str:
+        return embedding_rule if _is_embedding(path) else "adamw"
+
+    def init(params) -> OptState:
+        names = _path_tree(params)
+
+        def init_m(p, n):
+            if rule_for(n) == "row_adagrad":
+                return jnp.zeros((1,), jnp.float32)     # unused placeholder
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def init_v(p, n):
+            if rule_for(n) == "row_adagrad":
+                return jnp.zeros(p.shape[:1], jnp.float32)  # per-row accum
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def init_master(p, n):
+            # zero-size sentinel == "param already fp32, no master needed"
+            return p.astype(jnp.float32) if p.dtype != jnp.float32 \
+                else jnp.zeros((0,), jnp.float32)
+
+        m = jax.tree.map(init_m, params, names)
+        v = jax.tree.map(init_v, params, names)
+        master = jax.tree.map(init_master, params, names)
+        return OptState(jnp.zeros((), jnp.int32), m, v, master)
+
+    def update(grads, state: OptState, params):
+        names = _path_tree(params)
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / (gn + 1e-9)) if clip_norm else 1.0
+        step = state.step + 1
+        lr = lr_fn(step)
+
+        def upd(g, m, v, master, p, n):
+            g = g.astype(jnp.float32) * scale
+            has_master = master.size != 0        # static at trace time
+            x = master if has_master else p.astype(jnp.float32)
+            if rule_for(n) == "row_adagrad":
+                row_sq = jnp.mean(g * g, axis=tuple(range(1, g.ndim)))
+                v2 = v + row_sq
+                denom = jnp.sqrt(v2) + eps
+                x2 = x - lr * g / denom.reshape((-1,) + (1,) * (g.ndim - 1))
+                m2 = m
+            else:
+                m2 = b1 * m + (1 - b1) * g
+                v2 = b2 * v + (1 - b2) * g * g
+                mh = m2 / (1 - b1 ** step.astype(jnp.float32))
+                vh = v2 / (1 - b2 ** step.astype(jnp.float32))
+                x2 = x - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * x)
+            new_master = x2 if has_master else master
+            return x2.astype(p.dtype), m2, v2, new_master
+
+        out = jax.tree.map(upd, grads, state.m, state.v, state.master, params,
+                           names)
+        # unzip the 4-tuples
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_ma = jax.tree.map(lambda t: t[3], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, OptState(step, new_m, new_v, new_ma), \
+            {"grad_norm": gn, "lr": lr}
+
+    return init, update

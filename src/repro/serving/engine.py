@@ -1,0 +1,140 @@
+"""Batched query-serving engine with hedged requests (straggler mitigation).
+
+The paper's serving story (RAG retriever): requests arrive for possibly
+different corpora; the engine batches per-corpus, switches indices (AiSAQ
+makes that ms-order), and runs the search backend. `hedge=2` issues each
+batch to two replicas and takes the first completion — the classic
+tail-latency-at-scale mitigation for the multi-server tier.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    query: np.ndarray
+    corpus: str = "default"
+    k: int = 10
+    t_submit: float = field(default_factory=time.perf_counter)
+    result: Optional[np.ndarray] = None
+    t_done: float = 0.0
+    event: threading.Event = field(default_factory=threading.Event)
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class ServingEngine:
+    """search_fns: corpus -> fn(queries (B,d), k) -> ids (B,k).
+
+    Multiple entries in `replicas` enable hedging; `switch_fn(corpus)` is
+    called when the batch's corpus differs from the active one (the paper's
+    index-switch path)."""
+
+    def __init__(self, search_fns: Dict[str, Callable], *,
+                 max_batch: int = 32, max_wait_ms: float = 2.0,
+                 hedge: int = 1, replicas: Optional[List[Callable]] = None,
+                 switch_fn: Optional[Callable[[str], float]] = None):
+        self.search_fns = search_fns
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self.hedge = hedge
+        self.replicas = replicas
+        self.switch_fn = switch_fn
+        self.q: "queue.Queue[Request]" = queue.Queue()
+        self.metrics: List[float] = []
+        self.switch_times: List[float] = []
+        self._active_corpus: Optional[str] = None
+        self._stop = False
+        self._pool = ThreadPoolExecutor(max_workers=max(2, hedge * 2))
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, query: np.ndarray, corpus: str = "default", k: int = 10
+               ) -> Request:
+        r = Request(query=query, corpus=corpus, k=k)
+        self.q.put(r)
+        return r
+
+    def submit_wait(self, query, corpus="default", k=10, timeout=30.0):
+        r = self.submit(query, corpus, k)
+        r.event.wait(timeout)
+        return r
+
+    # -- engine loop ----------------------------------------------------------
+    def _collect_batch(self) -> List[Request]:
+        try:
+            first = self.q.get(timeout=0.1)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.max_wait
+        while len(batch) < self.max_batch:
+            left = deadline - time.perf_counter()
+            if left <= 0:
+                break
+            try:
+                r = self.q.get(timeout=left)
+            except queue.Empty:
+                break
+            if r.corpus != first.corpus:      # keep batches corpus-pure
+                self.q.put(r)
+                break
+            batch.append(r)
+        return batch
+
+    def _run_search(self, fn, queries, k):
+        return fn(queries, k)
+
+    def _loop(self):
+        while not self._stop:
+            batch = self._collect_batch()
+            if not batch:
+                continue
+            corpus = batch[0].corpus
+            if self.switch_fn is not None and corpus != self._active_corpus:
+                self.switch_times.append(self.switch_fn(corpus))
+                self._active_corpus = corpus
+            queries = np.stack([r.query for r in batch])
+            k = max(r.k for r in batch)
+            fn = self.search_fns[corpus]
+            if self.hedge > 1 and self.replicas:
+                futs = [self._pool.submit(self._run_search, rep, queries, k)
+                        for rep in self.replicas[:self.hedge]]
+                done, pending = wait(futs, return_when=FIRST_COMPLETED)
+                ids = list(done)[0].result()
+                for p in pending:
+                    p.cancel()
+            else:
+                ids = fn(queries, k)
+            now = time.perf_counter()
+            for i, r in enumerate(batch):
+                r.result = ids[i, :r.k]
+                r.t_done = now
+                self.metrics.append(r.latency_s)
+                r.event.set()
+
+    # -- stats ----------------------------------------------------------------
+    def latency_percentiles(self):
+        if not self.metrics:
+            return {}
+        a = np.array(self.metrics)
+        return {"p50_ms": float(np.percentile(a, 50) * 1e3),
+                "p95_ms": float(np.percentile(a, 95) * 1e3),
+                "p99_ms": float(np.percentile(a, 99) * 1e3),
+                "n": len(a)}
+
+    def stop(self):
+        self._stop = True
+        self._t.join(timeout=2.0)
+        self._pool.shutdown(wait=False)

@@ -1,0 +1,52 @@
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step, restore,
+                                   save)
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.bfloat16),
+                       "c": [jnp.zeros((2, 2)), jnp.asarray(3)]}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), t, step=7)
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    r = restore(str(tmp_path), like)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), t, r)
+
+
+def test_latest_step_picks_newest(tmp_path):
+    t = _tree()
+    save(str(tmp_path), t, step=3)
+    save(str(tmp_path), t, step=12)
+    assert latest_step(str(tmp_path)) == 12
+    r = restore(str(tmp_path), t, step=3)        # explicit older step works
+    assert r["a"].shape == (3, 4)
+
+
+def test_async_checkpointer_overlap(tmp_path):
+    ck = AsyncCheckpointer()
+    t = {"w": jnp.ones((512, 512))}
+    ck.save(str(tmp_path), t, step=1)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 1
+    # value snapshotted at save() call even if "training" continues
+    t2 = restore(str(tmp_path), t)
+    np.testing.assert_array_equal(np.asarray(t2["w"]), np.ones((512, 512)))
+
+
+def test_atomic_publish_no_partial(tmp_path):
+    t = _tree()
+    p = save(str(tmp_path), t, step=5)
+    assert p.endswith("step_00000005")
+    import os
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))

@@ -1,0 +1,68 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import (global_norm, make_optimizer, warmup_cosine)
+
+
+def test_adamw_converges_quadratic():
+    opt_init, opt_update = make_optimizer(lambda s: 0.1, weight_decay=0.0)
+    p = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    st = opt_init(p)
+    target = jnp.asarray([1.0, 1.0, 1.0])
+    for _ in range(150):
+        g = jax.tree.map(lambda w: 2 * (w - target), p)
+        p, st, _ = opt_update(g, st, p)
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_mixed_precision_master_copy():
+    opt_init, opt_update = make_optimizer(lambda s: 1e-3)
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = opt_init(p)
+    assert st.master["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4,), 1e-4, jnp.bfloat16)}
+    p2, st2, _ = opt_update(g, st, p)
+    assert p2["w"].dtype == jnp.bfloat16
+    # master moved even though bf16 param may round
+    assert float(jnp.abs(st2.master["w"] - st.master["w"]).max()) > 0
+
+
+def test_row_adagrad_for_embeddings():
+    opt_init, opt_update = make_optimizer(lambda s: 0.1)
+    p = {"tables": [jnp.ones((16, 4), jnp.float32)]}
+    st = opt_init(p)
+    assert st.v["tables"][0].shape == (16,)      # rowwise accumulator
+    assert st.m["tables"][0].shape == (1,)       # no 1st moment
+    g = {"tables": [jnp.zeros((16, 4)).at[3].set(1.0)]}
+    p2, st2, _ = opt_update(g, st, p)
+    delta = np.asarray(jnp.abs(p2["tables"][0] - p["tables"][0]).sum(-1))
+    assert delta[3] > 0 and delta[0] == 0        # only touched rows move
+
+
+def test_grad_clipping():
+    opt_init, opt_update = make_optimizer(lambda s: 1.0, clip_norm=1.0,
+                                          weight_decay=0.0)
+    p = {"w": jnp.zeros((3,))}
+    st = opt_init(p)
+    g = {"w": jnp.asarray([100.0, 0.0, 0.0])}
+    p2, _, stats = opt_update(g, st, p)
+    assert float(stats["grad_norm"]) > 99
+    assert float(jnp.abs(p2["w"]).max()) < 1.2   # clipped step ~ lr * 1.0
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 0.11
+    assert float(lr(jnp.int32(100))) < 0.2
+
+
+def test_int8_compression_roundtrip():
+    from repro.distributed.compression import dequantize_int8, quantize_int8
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    scale = jnp.max(jnp.abs(x))
+    err = jnp.abs(dequantize_int8(quantize_int8(x, scale), scale) - x)
+    assert float(err.max()) <= float(scale) / 127.0 + 1e-6

@@ -1,0 +1,71 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pq
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    return rng.normal(size=(2000, 32)).astype(np.float32)
+
+
+def test_kmeans_reduces_distortion(data):
+    cb4 = pq.train_codebooks(jax.random.PRNGKey(0), data, m=4, iters=1)
+    cb4b = pq.train_codebooks(jax.random.PRNGKey(0), data, m=4, iters=10)
+    for cb_few, cb_more in [(cb4, cb4b)]:
+        e1 = np.mean((np.asarray(pq.decode(cb_few, pq.encode(cb_few, data)))
+                      - data) ** 2)
+        e2 = np.mean((np.asarray(pq.decode(cb_more, pq.encode(cb_more, data)))
+                      - data) ** 2)
+        assert e2 <= e1 + 1e-6
+
+
+def test_more_subquantizers_less_error(data):
+    errs = []
+    for m in (2, 8, 16):
+        cb = pq.train_codebooks(jax.random.PRNGKey(0), data, m=m, iters=8)
+        rec = np.asarray(pq.decode(cb, pq.encode(cb, data)))
+        errs.append(np.mean((rec - data) ** 2))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_adc_equals_exact_distance_to_decoded(data):
+    """ADC(q, code) must EXACTLY equal ||q - decode(code)||^2 (l2)."""
+    cb = pq.train_codebooks(jax.random.PRNGKey(0), data, m=8, iters=4)
+    codes = pq.encode(cb, data[:100])
+    q = data[500:503]
+    lut = pq.build_lut(cb, q, metric="l2")
+    d_adc = np.asarray(pq.adc(lut, codes))
+    rec = np.asarray(pq.decode(cb, codes))
+    d_exact = np.asarray(pq.exact_distances(q, rec, metric="l2"))
+    np.testing.assert_allclose(d_adc, d_exact, rtol=2e-4, atol=1e-3)
+
+
+def test_adc_mips(data):
+    cb = pq.train_codebooks(jax.random.PRNGKey(1), data, m=8, iters=4)
+    codes = pq.encode(cb, data[:64])
+    q = data[100:102]
+    lut = pq.build_lut(cb, q, metric="mips")
+    d_adc = np.asarray(pq.adc(lut, codes))
+    rec = np.asarray(pq.decode(cb, codes))
+    np.testing.assert_allclose(d_adc, -(np.asarray(q) @ rec.T), rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_adc_onehot_matches_gather(data):
+    cb = pq.train_codebooks(jax.random.PRNGKey(0), data, m=8, iters=2)
+    codes = pq.encode(cb, data[:50])
+    lut = pq.build_lut(cb, data[:3], metric="l2")
+    a = np.asarray(pq.adc(lut, codes))
+    b = np.asarray(pq.adc_onehot(lut, codes))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+def test_groundtruth_bruteforce(data):
+    gt = pq.groundtruth(data[:5], data[:200], 3)
+    d = ((data[:5][:, None] - data[None, :200]) ** 2).sum(-1)
+    expect = np.argsort(d, axis=1)[:, :3]
+    assert (gt == expect).mean() > 0.99

@@ -1,0 +1,102 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunk_layout import B_NUM, ChunkLayout
+
+
+@settings(max_examples=60, deadline=None)
+@given(dim=st.integers(4, 512).map(lambda x: x * 4),
+       R=st.integers(1, 128),
+       m=st.integers(1, 64).map(lambda x: x * 4),
+       dt=st.sampled_from(["float32", "uint8"]))
+def test_layout_invariants(dim, R, m, dt):
+    d = ChunkLayout("diskann", dim, dt, R, m)
+    a = ChunkLayout("aisaq", dim, dt, R, m)
+    # paper formulas hold for ALL parameterizations
+    assert a.chunk_bytes == d.chunk_bytes + R * m
+    assert d.chunk_bytes == d.b_full + B_NUM * (R + 1)
+    # a chunk never straddles a block boundary
+    for i in (0, 1, 17):
+        off = a.file_offset(i)
+        if a.chunk_bytes <= a.block_bytes:
+            assert off // a.block_bytes == \
+                (off + a.chunk_bytes - 1) // a.block_bytes
+        else:
+            assert off % a.block_bytes == 0
+    # io_bytes covers the chunk and is block-aligned
+    assert a.io_bytes >= a.chunk_bytes or a.nodes_per_block > 0
+    assert a.io_bytes % a.block_bytes == 0
+    # device strides lane-aligned, fields word-aligned
+    assert a.device_stride % 128 == 0
+    assert a.dev_off_ids % 4 == 0 and a.dev_off_pq % 4 == 0
+    assert a.device_stride >= a.chunk_bytes
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 64), m=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 16))
+def test_adc_identity(n, m, seed):
+    """ADC distance == exact distance to the decoded vector — exact PQ
+    decomposition property (any codes, any codebooks)."""
+    from repro.core import pq
+    rng = np.random.default_rng(seed)
+    dsub = 4
+    cents = rng.normal(size=(m, 256, dsub)).astype(np.float32)
+    codes = rng.integers(0, 256, (n, m)).astype(np.uint8)
+    q = rng.normal(size=(1, m * dsub)).astype(np.float32)
+    cb = pq.PQCodebooks(jnp.asarray(cents))
+    lut = pq.build_lut(cb, jnp.asarray(q), metric="l2")
+    d_adc = np.asarray(pq.adc(lut, jnp.asarray(codes)))[0]
+    rec = np.asarray(pq.decode(cb, jnp.asarray(codes)))
+    d_exact = ((rec - q) ** 2).sum(-1)
+    np.testing.assert_allclose(d_adc, d_exact, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(e=st.integers(1, 200), n=st.integers(2, 50),
+       mult=st.sampled_from([8, 32, 512]), seed=st.integers(0, 999))
+def test_edge_padding_is_noop(e, n, mult, seed):
+    """pad_edges dummies must not change GNN aggregation (exactness of the
+    out-of-range-drop trick)."""
+    from repro.models.gnn import pad_edges, _aggregate
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, (e, 2)).astype(np.int32)
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    padded = pad_edges(edges, mult, n)
+    assert padded.shape[0] % mult == 0
+    a1 = np.asarray(_aggregate(jnp.asarray(x)[edges[:, 0]],
+                               jnp.asarray(edges[:, 1]), n, "sum"))
+    xp = jnp.asarray(x)[jnp.clip(jnp.asarray(padded[:, 0]), 0, n - 1)]
+    a2 = np.asarray(_aggregate(xp, jnp.asarray(padded[:, 1]), n, "sum"))
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 4), s=st.integers(2, 40), seed=st.integers(0, 99))
+def test_flash_attention_rowstochastic(b, s, seed):
+    """Attention output rows are convex combinations of V rows: outputs lie
+    within [min(V), max(V)] per feature."""
+    from repro.models.layers import flash_attention
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, s, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, 2, 8)), jnp.float32)
+    out = np.asarray(flash_attention(q, k, v, causal=True, block_q=16,
+                                     block_kv=16))
+    lo = np.asarray(v).min() - 1e-4
+    hi = np.asarray(v).max() + 1e-4
+    assert (out >= lo).all() and (out <= hi).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 2048), seed=st.integers(0, 999))
+def test_int8_grad_compression_error_bound(n, seed):
+    from repro.distributed.compression import dequantize_int8, quantize_int8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32)) * 10
+    scale = jnp.max(jnp.abs(x))
+    y = dequantize_int8(quantize_int8(x, scale), scale)
+    assert float(jnp.abs(y - x).max()) <= float(scale) / 127 + 1e-5

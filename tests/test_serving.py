@@ -1,0 +1,52 @@
+import time
+
+import numpy as np
+
+from repro.serving.engine import ServingEngine
+
+
+def _search_fn(delay_s=0.0):
+    def fn(queries, k):
+        if delay_s:
+            time.sleep(delay_s)
+        # deterministic fake ids
+        return np.tile(np.arange(k)[None], (queries.shape[0], 1))
+    return fn
+
+
+def test_engine_batches_and_answers():
+    eng = ServingEngine({"default": _search_fn()}, max_batch=8,
+                        max_wait_ms=5.0)
+    reqs = [eng.submit(np.ones(8, np.float32) * i) for i in range(20)]
+    for r in reqs:
+        r.event.wait(5.0)
+        assert r.result is not None and r.result.shape == (10,)
+    pct = eng.latency_percentiles()
+    assert pct["n"] == 20
+    eng.stop()
+
+
+def test_hedging_beats_straggler():
+    fast, slow = _search_fn(0.002), _search_fn(0.25)
+    hedged = ServingEngine({"default": slow}, hedge=2,
+                           replicas=[slow, fast], max_wait_ms=1.0)
+    r = hedged.submit_wait(np.ones(4, np.float32))
+    assert r.latency_s < 0.2          # fast replica won the hedge
+    hedged.stop()
+    unhedged = ServingEngine({"default": slow}, max_wait_ms=1.0)
+    r2 = unhedged.submit_wait(np.ones(4, np.float32))
+    assert r2.latency_s >= 0.2
+    unhedged.stop()
+
+
+def test_corpus_switch_called():
+    calls = []
+    eng = ServingEngine({"a": _search_fn(), "b": _search_fn()},
+                        switch_fn=lambda c: calls.append(c) or 0.001,
+                        max_wait_ms=1.0)
+    eng.submit_wait(np.ones(4, np.float32), corpus="a")
+    eng.submit_wait(np.ones(4, np.float32), corpus="b")
+    eng.submit_wait(np.ones(4, np.float32), corpus="b")  # no switch
+    assert calls == ["a", "b"]
+    assert len(eng.switch_times) == 2
+    eng.stop()

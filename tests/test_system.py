@@ -1,0 +1,48 @@
+"""End-to-end behaviour tests for the paper's system."""
+import numpy as np
+
+from repro.core.index_io import HostIndex, recall_at
+from repro.core.index_switch import IndexManager
+from repro.serving.engine import ServingEngine
+
+
+def test_end_to_end_serving_with_switch(index_dirs, small_corpus):
+    """Full serving path: engine + index manager + AiSAQ host search,
+    switching corpora mid-stream (the paper's RAG scenario)."""
+    base, q, gt = small_corpus
+    mgr = IndexManager({"wiki": index_dirs["aisaq"],
+                        "news": index_dirs["aisaq"]})
+
+    def search(queries, k):
+        out = np.zeros((queries.shape[0], k), np.int64)
+        for i in range(queries.shape[0]):
+            out[i], _ = mgr.search(queries[i], k, L=40)
+        return out
+
+    eng = ServingEngine({"wiki": search, "news": search},
+                        switch_fn=mgr.switch, max_wait_ms=1.0)
+    results = []
+    for i in range(8):
+        corpus = "wiki" if i % 2 == 0 else "news"
+        r = eng.submit_wait(q[i], corpus=corpus)
+        results.append(r.result)
+    ids = np.stack(results)
+    assert recall_at(ids, gt[:8], 10) >= 0.8
+    assert len(eng.switch_times) >= 2          # switched back and forth
+    # AiSAQ switches are ms-order even at this scale
+    assert max(eng.switch_times[1:]) < 0.2
+    eng.stop()
+    mgr.close()
+
+
+def test_end_to_end_training_recsys():
+    from repro.launch.train import train_loop
+    h = train_loop("dcn-v2", "train_batch", steps=25, verbose=False, lr=1e-2)
+    assert h["losses"][-1] < h["losses"][0]
+
+
+def test_end_to_end_training_gnn_accuracy():
+    from repro.launch.train import train_loop
+    h = train_loop("graphsage-reddit", "full_graph_sm", steps=30,
+                   verbose=False, lr=1e-2)
+    assert h["losses"][-1] < h["losses"][0] * 0.8
