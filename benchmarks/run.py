@@ -5,7 +5,8 @@ import sys
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=["paper", "device"], default=None)
+    ap.add_argument("--only", choices=["paper", "device", "search"],
+                    default=None)
     args = ap.parse_args(argv)
     rows = []
     if args.only in (None, "paper"):
@@ -14,6 +15,9 @@ def main(argv=None) -> None:
     if args.only in (None, "device"):
         from benchmarks.bench_device import all_benchmarks as device
         rows += device()
+    if args.only in (None, "search"):
+        from benchmarks.bench_search import all_benchmarks as search
+        rows += search()
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")

@@ -45,10 +45,8 @@ def main():
     mgr = IndexManager(corpora)
 
     def search(queries, k):
-        out = np.zeros((queries.shape[0], k), np.int64)
-        for i in range(queries.shape[0]):
-            out[i], _ = mgr.search(queries[i], k, L=32)
-        return out
+        ids, _ = mgr.search_batch(queries, k, L=32)
+        return ids
 
     eng = ServingEngine({c: search for c in corpora}, switch_fn=mgr.switch,
                         max_wait_ms=1.0)

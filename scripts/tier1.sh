@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Canonical tier-1 verification entry point (ROADMAP "Tier-1 verify").
+# CI and builders should run THIS script rather than hand-rolling the
+# pytest incantation, so the command stays in one place.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

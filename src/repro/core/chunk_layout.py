@@ -203,6 +203,23 @@ def pack_chunks_device(vectors: np.ndarray, adjacency: np.ndarray,
 # ---------------------------------------------------------------------------
 
 
+def chunk_matrix(raw: np.ndarray, layout: ChunkLayout, n: int) -> np.ndarray:
+    """Whole-file uint8 buffer -> (n, chunk_bytes) matrix of node chunks.
+
+    The strided twin of calling ``parse_chunk`` n times: one reshape peels
+    the block padding off, so downstream field slices are plain 2-D views.
+    """
+    if layout.nodes_per_block:
+        npb = layout.nodes_per_block
+        nblk = -(-n // npb)
+        blocks = raw[:nblk * layout.block_bytes] \
+            .reshape(nblk, layout.block_bytes)
+        return blocks[:, :npb * layout.chunk_bytes] \
+            .reshape(nblk * npb, layout.chunk_bytes)[:n]
+    per = layout.blocks_per_chunk * layout.block_bytes
+    return raw[:n * per].reshape(n, per)[:, :layout.chunk_bytes]
+
+
 def parse_chunk(raw: np.ndarray, layout: ChunkLayout):
     """raw: (chunk_bytes,) uint8 -> (vec f32/u8, nbr_ids (R,) i32, nbr_codes)."""
     if layout.data_dtype == "uint8":

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.chunk_layout import ChunkLayout, pack_chunks_device
+from repro.core.chunk_layout import ChunkLayout, chunk_matrix, \
+    pack_chunks_device
 from repro.kernels import ops
 
 
@@ -74,20 +75,22 @@ def load_device_index(path: str) -> Tuple[DeviceIndex, ChunkLayout, str]:
         meta = json.load(f)
     codes = np.load(os.path.join(path, "pq_codes.npy"))
     centroids = np.load(os.path.join(path, "pq_centroids.npy"))
-    # reconstruct vectors+graph from chunks.bin
-    from repro.core.chunk_layout import parse_chunk
+    # reconstruct vectors+graph from chunks.bin (vectorized: one strided
+    # reshape to an (n, chunk_bytes) view of all chunks, then field slices)
     layout = ChunkLayout(mode=meta["mode"], dim=meta["dim"],
                          data_dtype=meta["data_dtype"], R=meta["R"],
                          pq_m=meta["pq_m"], block_bytes=meta["block_bytes"])
     raw = np.fromfile(os.path.join(path, "chunks.bin"), dtype=np.uint8)
     n = meta["n"]
-    vecs = np.zeros((n, meta["dim"]),
-                    np.uint8 if meta["data_dtype"] == "uint8" else np.float32)
-    graph = np.zeros((n, meta["R"]), np.int32)
-    for i in range(n):
-        off = layout.file_offset(i)
-        v, ids, _ = parse_chunk(raw[off:off + layout.chunk_bytes], layout)
-        vecs[i], graph[i] = v, ids
+    chunks = chunk_matrix(raw, layout, n)
+    if meta["data_dtype"] == "uint8":
+        vecs = chunks[:, :layout.b_full].copy()
+    else:
+        vecs = np.ascontiguousarray(
+            chunks[:, :layout.b_full]).view(np.float32).reshape(n, -1)
+    graph = np.ascontiguousarray(
+        chunks[:, layout.off_ids:layout.off_ids + layout.R * 4]) \
+        .view(np.int32).reshape(n, layout.R)
     idx, layout = from_arrays(vecs, graph, centroids, codes,
                               mode=meta["mode"],
                               block_bytes=meta["block_bytes"])
@@ -113,12 +116,18 @@ def _mask_intra_dups(ids: jax.Array) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "L", "w", "max_hops", "layout", "metric", "backend"))
+    static_argnames=("k", "L", "w", "max_hops", "layout", "metric", "backend",
+                     "adc_dtype"))
 def beam_search_device(index: DeviceIndex, queries: jax.Array, *, k: int,
                        L: int, w: int = 4, max_hops: int = 128,
                        layout: ChunkLayout, metric: str = "l2",
-                       backend: str = "auto"):
-    """Batched DiskANN/AiSAQ beam search. Returns (topk_ids, topk_d, hops)."""
+                       backend: str = "auto", adc_dtype: str = "f32"):
+    """Batched DiskANN/AiSAQ beam search. Returns (topk_ids, topk_d, hops).
+
+    adc_dtype="int8" runs neighbor ADC through the int8 fused-hop kernel
+    (2x MXU rate); the exact re-rank distances stay f32, so end recall is
+    within quantization noise of the f32 path (aisaq mode only).
+    """
     nq = queries.shape[0]
     N = index.n
     R = layout.R
@@ -166,7 +175,7 @@ def beam_search_device(index: DeviceIndex, queries: jax.Array, *, k: int,
         if layout.mode == "aisaq":
             exact, nids, nd = ops.fused_hop(
                 index.chunk_words, fids, lut, queries, layout=layout,
-                metric=metric, backend=backend)
+                metric=metric, backend=backend, adc_dtype=adc_dtype)
         else:
             # DiskANN-on-device: ids from chunks, codes from the resident
             # (N, m) table — the memory-hungry baseline placement.

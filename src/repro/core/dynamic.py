@@ -36,6 +36,8 @@ class DynamicHostIndex(HostIndex):
         assert self.meta["mode"] == "aisaq", "dynamic ops need inline codes"
         os.close(self.fd)
         self.fd = os.open(os.path.join(path, "chunks.bin"), os.O_RDWR)
+        if self.cache is not None:
+            self.cache.fd = self.fd      # cache must read via the new fd
         # lazy (mmap) code table for build-time neighbor-code fetches; new
         # codes accumulate in RAM until flush()
         self._codes_mm = np.load(os.path.join(path, "pq_codes.npy"),
@@ -90,6 +92,8 @@ class DynamicHostIndex(HostIndex):
         if end > cur:
             os.pwrite(self.fd, b"\0" * (end - cur), cur)
         os.pwrite(self.fd, chunk.tobytes(), off)
+        if self.cache is not None:       # in-place write: drop stale blocks
+            self.cache.invalidate(off, lay.chunk_bytes)
 
     def _dist(self, a: np.ndarray, b: np.ndarray) -> float:
         a, b = a.astype(np.float32), b.astype(np.float32)
@@ -196,13 +200,13 @@ class DynamicHostIndex(HostIndex):
                predicate: Optional[Callable[[int], bool]] = None):
         ids, stats = super().search(q, k, L, w)
         drop = self.tombstones
-        ok = [i for i in ids if int(i) not in drop
+        ok = [i for i in ids if int(i) >= 0 and int(i) not in drop
               and (predicate is None or predicate(int(i)))]
         if len(ok) < k and (drop or predicate is not None):
             # widen once: tombstones/filters thin the pool
             ids2, s2 = super().search(q, k * 4, max(L, 2 * k * 4), w)
             stats.ios += s2.ios
             stats.bytes_read += s2.bytes_read
-            ok = [i for i in ids2 if int(i) not in drop
+            ok = [i for i in ids2 if int(i) >= 0 and int(i) not in drop
                   and (predicate is None or predicate(int(i)))]
         return np.asarray(ok[:k], np.int64), stats

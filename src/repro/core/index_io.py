@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.block_cache import BlockCache
 from repro.core.chunk_layout import B_NUM, ChunkLayout, pack_chunks_file, parse_chunk
 
 
@@ -39,6 +40,17 @@ def np_build_lut(centroids: np.ndarray, q: np.ndarray, metric: str) -> np.ndarra
         return -np.einsum("mkd,mxd->mk", centroids, qs)
     diff = centroids - qs
     return np.einsum("mkd,mkd->mk", diff, diff)
+
+
+def np_build_lut_batch(centroids: np.ndarray, Q: np.ndarray,
+                       metric: str) -> np.ndarray:
+    """centroids (m, ks, dsub), Q (nq, d) -> (nq, m, ks) f32 LUTs."""
+    m, ks, dsub = centroids.shape
+    qs = Q.astype(np.float32).reshape(Q.shape[0], m, 1, dsub)
+    if metric == "mips":
+        return -np.einsum("mkd,qmxd->qmk", centroids, qs)
+    diff = centroids[None] - qs
+    return np.einsum("qmkd,qmkd->qmk", diff, diff)
 
 
 def np_adc(lut: np.ndarray, codes: np.ndarray) -> np.ndarray:
@@ -97,10 +109,13 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
 @dataclass
 class SearchStats:
     hops: int = 0
-    ios: int = 0
-    bytes_read: int = 0
+    ios: int = 0            # logical chunk reads (cache hit or miss)
+    bytes_read: int = 0     # bytes actually pulled from storage
     pq_dists: int = 0
     latency_s: float = 0.0
+    syscalls: int = 0       # batched preadv calls issued for this query
+    cache_hits: int = 0
+    cache_misses: int = 0
 
 
 class HostIndex:
@@ -115,16 +130,24 @@ class HostIndex:
         self.fd: int = -1
         self.path: str = ""
         self.load_time_s: float = 0.0
+        self.cache: Optional[BlockCache] = None
 
     # -- lifecycle ---------------------------------------------------------
     @classmethod
     def load(cls, path: str, mode: Optional[str] = None,
-             shared_centroids: Optional[np.ndarray] = None) -> "HostIndex":
+             shared_centroids: Optional[np.ndarray] = None,
+             cache_bytes: int = 10 << 20) -> "HostIndex":
         """Open an index. `mode` may force diskann/aisaq residency policy.
 
         `shared_centroids`: paper §4.4 — when switching between indices built
         with the same PQ centroids, skip the centroid load entirely (only the
         4 KiB meta.json + entry-point codes move).
+
+        `cache_bytes`: DRAM budget for the LRU block cache on the search hot
+        path (0 disables retention but keeps batched reads). This budget is
+        deliberately NOT part of `resident_bytes`: the paper's Table 2 counts
+        the *algorithmic* residency that scales with N (code tables), while
+        the cache is a fixed, tunable knob — report it via `cache_bytes_used`.
         """
         t0 = time.perf_counter()
         self = cls()
@@ -146,6 +169,8 @@ class HostIndex:
             # DiskANN residency policy: ALL pq codes pinned in RAM.
             self.pq_codes = np.load(os.path.join(path, "pq_codes.npy"))
         self.fd = os.open(os.path.join(path, "chunks.bin"), os.O_RDONLY)
+        self.cache = BlockCache(self.fd, self.layout.io_bytes,
+                                capacity_bytes=cache_bytes)
         self.load_time_s = time.perf_counter() - t0
         return self
 
@@ -153,6 +178,11 @@ class HostIndex:
         if self.fd >= 0:
             os.close(self.fd)
             self.fd = -1
+        if self.cache is not None:
+            self.cache.clear()
+
+    def cache_bytes_used(self) -> int:
+        return 0 if self.cache is None else self.cache.used_bytes
 
     def resident_bytes(self, include_centroids: bool = True) -> int:
         """RAM held by the index (paper Table 2's algorithmic portion)."""
@@ -172,15 +202,19 @@ class HostIndex:
         nbytes = lay.io_bytes
         raw = os.pread(self.fd, nbytes, blk_start)
         stats.ios += 1
+        stats.syscalls += 1
         stats.bytes_read += nbytes
         inner = off - blk_start
         return np.frombuffer(raw, dtype=np.uint8)[inner:inner + lay.chunk_bytes]
 
-    # -- Algorithm 1 (faithful) ----------------------------------------------
-    def search(self, q: np.ndarray, k: int, L: int, w: int = 4
-               ) -> Tuple[np.ndarray, SearchStats]:
-        """DiskANN beam search with re-ranking (paper Algorithm 1)."""
+    # -- Algorithm 1 (faithful scalar reference) -----------------------------
+    def search_ref(self, q: np.ndarray, k: int, L: int, w: int = 4
+                   ) -> Tuple[np.ndarray, SearchStats]:
+        """Scalar DiskANN beam search (paper Algorithm 1), one pread per
+        node expansion. Kept as the semantics oracle for the vectorized
+        hot path — `search` must return bit-identical ids."""
         t0 = time.perf_counter()
+        q = np.asarray(q, dtype=np.float32)   # same arithmetic as `search`
         stats = SearchStats()
         lay = self.layout
         metric = self.meta["metric"]
@@ -238,18 +272,217 @@ class HostIndex:
         stats.latency_s = time.perf_counter() - t0
         return topk, stats
 
+    # -- vectorized hot path -------------------------------------------------
+    def _frontier_offsets(self, nodes: np.ndarray
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """node ids -> (block-aligned file offsets, inner chunk offsets)."""
+        lay = self.layout
+        if lay.nodes_per_block:
+            blk, slot = np.divmod(nodes, lay.nodes_per_block)
+            return blk * lay.block_bytes, slot * lay.chunk_bytes
+        per = lay.blocks_per_chunk * lay.block_bytes
+        return nodes * per, np.zeros_like(nodes)
+
+    def search(self, q: np.ndarray, k: int, L: int, w: int = 4
+               ) -> Tuple[np.ndarray, SearchStats]:
+        """Vectorized beam search (single query). Bit-identical results to
+        `search_ref`; all per-hop work batched (one preadv fetch, one ADC)."""
+        ids, stats = self.search_batch(q[None], k, L, w)
+        return ids[0], stats[0]
+
     def search_batch(self, Q: np.ndarray, k: int, L: int, w: int = 4):
+        """Batched vectorized beam search over all queries at once.
+
+        All queries hop together (per-hop frontier interleaving): each hop
+        gathers the union of every active query's frontier blocks in ONE
+        cache fetch, parses all chunks as a single matrix, and ADCs all
+        fresh neighbor codes of all queries as one (F, m) batch against the
+        shared per-query LUT stack. Returns (ids (nq, k), [SearchStats]).
+        """
+        t0 = time.perf_counter()
+        Q = np.asarray(Q, dtype=np.float32)
+        nq = Q.shape[0]
+        lay = self.layout
+        metric = self.meta["metric"]
+        n = int(self.meta["n"])
+        lut = np_build_lut_batch(self.centroids, Q, metric)   # (nq, m, ks)
+        m = lut.shape[1]
+        jj = np.arange(m)
+        eps = np.asarray(self.meta["entry_points"], dtype=np.int64)
+        n_ep = len(eps)
+        # per-query counters (numpy-resident; folded into SearchStats at end)
+        hops_a = np.zeros(nq, np.int64)
+        ios_a = np.zeros(nq, np.int64)
+        bytes_a = np.zeros(nq, np.int64)
+        pq_a = np.zeros(nq, np.int64)
+        sys_a = np.zeros(nq, np.int64)
+        hit_a = np.zeros(nq, np.int64)
+        miss_a = np.zeros(nq, np.int64)
+        # candidate lists (sorted by PQ distance, stable; inf-padded to L)
+        width = max(L, n_ep)
+        cand_ids = np.full((nq, width), -1, np.int64)
+        cand_d = np.full((nq, width), np.inf, np.float32)
+        cand_exp = np.ones((nq, width), bool)
+        cand_ids[:, :n_ep] = eps
+        cand_d[:, :n_ep] = lut[:, jj, self.ep_codes.astype(np.int64)].sum(-1)
+        cand_exp[:, :n_ep] = False
+        pq_a += n_ep
+        order = np.argsort(cand_d, axis=1, kind="stable")[:, :L]
+        cand_ids = np.take_along_axis(cand_ids, order, 1)
+        cand_d = np.take_along_axis(cand_d, order, 1)
+        cand_exp = np.take_along_axis(cand_exp, order, 1)
+        # visited set: packed uint64 bitset, one row per query
+        bits = np.zeros((nq, -(-n // 64)), np.uint64)
+        np.bitwise_or.at(
+            bits, (np.repeat(np.arange(nq), n_ep), np.tile(eps >> 6, nq)),
+            np.tile(np.uint64(1) << (eps & 63).astype(np.uint64), nq))
+        pool_ids_cols: List[np.ndarray] = []
+        pool_d_cols: List[np.ndarray] = []
+        while True:
+            # 1. frontier = first w unexpanded candidates per query
+            sel = ~cand_exp & np.isfinite(cand_d)
+            fmask = sel & (np.cumsum(sel, axis=1) <= w)
+            if not fmask.any():
+                break
+            qf, cols = np.nonzero(fmask)       # row-major: grouped by query
+            cand_exp |= fmask
+            nf = cand_ids[qf, cols]
+            np.add.at(hops_a, np.unique(qf), 1)
+            np.add.at(ios_a, qf, 1)
+            # 2. ONE batched fetch for every frontier chunk this hop
+            blk_off, inner = self._frontier_offsets(nf)
+            blocks, hit_mask, n_sys = self.cache.fetch(blk_off)
+            # attribute unique-block hits/misses/bytes to the first query
+            # that asked for each block (hit_mask is in first-appearance
+            # order, matching sorted first-occurrence indices); syscalls to
+            # the hop's lead query
+            uq = qf[np.sort(np.unique(blk_off, return_index=True)[1])]
+            np.add.at(hit_a, uq[hit_mask], 1)
+            np.add.at(miss_a, uq[~hit_mask], 1)
+            np.add.at(bytes_a, uq[~hit_mask], lay.io_bytes)
+            sys_a[qf[0]] += n_sys
+            P = nf.size
+            # chunk slice-out: `inner` takes only nodes_per_block distinct
+            # values, so per-slot basic slicing beats a fancy-index gather
+            chunk = np.empty((P, lay.chunk_bytes), np.uint8)
+            for s in np.unique(inner):
+                rows = inner == s
+                chunk[rows] = blocks[rows, s:s + lay.chunk_bytes]
+            # 3. parse all chunks as one matrix
+            if lay.data_dtype == "uint8":
+                vf = chunk[:, :lay.b_full].astype(np.float32)
+            else:
+                vf = np.ascontiguousarray(chunk[:, :lay.b_full]) \
+                    .view(np.float32).reshape(P, -1)
+            nbr = np.ascontiguousarray(
+                chunk[:, lay.off_ids:lay.off_ids + lay.R * B_NUM]) \
+                .view(np.int32).reshape(P, lay.R).astype(np.int64)
+            qv = Q[qf]
+            if metric == "mips":
+                exact = -np.einsum("pd,pd->p", vf, qv)
+            else:
+                exact = ((vf - qv) ** 2).sum(axis=1)
+            # 4. fresh neighbors: valid, unvisited, first occurrence per query
+            q_rep = np.repeat(qf, lay.R)
+            ids_f = nbr.reshape(-1)
+            valid = ids_f >= 0
+            safe = np.where(valid, ids_f, 0)
+            seen = (bits[q_rep, safe >> 6] >>
+                    (safe & 63).astype(np.uint64)) & np.uint64(1)
+            first_occ = np.zeros(ids_f.size, bool)
+            key = np.where(valid, q_rep * n + safe,
+                           nq * n + np.arange(ids_f.size))
+            first_occ[np.unique(key, return_index=True)[1]] = True
+            fresh = valid & (seen == 0) & first_occ
+            f_q = q_rep[fresh]
+            f_ids = ids_f[fresh]
+            if lay.mode == "aisaq":
+                # THE AiSAQ step: neighbor codes come from the chunks we just
+                # fetched — no N-sized RAM table is ever touched.
+                codes = chunk[:, lay.off_pq:lay.off_pq + lay.R * lay.pq_m] \
+                    .reshape(P * lay.R, lay.pq_m)[fresh]
+            else:
+                codes = self.pq_codes[f_ids]
+            f_d = lut[f_q[:, None], jj[None, :],
+                      codes.astype(np.int64)].sum(-1).astype(np.float32)
+            np.add.at(pq_a, f_q, 1)
+            np.bitwise_or.at(bits, (f_q, f_ids >> 6),
+                             np.uint64(1) << (f_ids & 63).astype(np.uint64))
+            # 5. pool the exact distances of expanded nodes (re-rank pool)
+            frank = _group_rank(qf)
+            pcol_i = np.full((nq, w), -1, np.int64)
+            pcol_d = np.full((nq, w), np.inf, np.float32)
+            pcol_i[qf, frank] = nf
+            pcol_d[qf, frank] = exact
+            pool_ids_cols.append(pcol_i)
+            pool_d_cols.append(pcol_d)
+            # 6. insert fresh neighbors, re-sort, trim to L
+            counts = np.bincount(f_q, minlength=nq)
+            K = int(counts.max()) if counts.size else 0
+            if K:
+                nrank = _group_rank(f_q)
+                new_ids = np.full((nq, K), -1, np.int64)
+                new_d = np.full((nq, K), np.inf, np.float32)
+                new_ids[f_q, nrank] = f_ids
+                new_d[f_q, nrank] = f_d
+                all_ids = np.concatenate([cand_ids, new_ids], axis=1)
+                all_d = np.concatenate([cand_d, new_d], axis=1)
+                all_exp = np.concatenate(
+                    [cand_exp, ~np.isfinite(new_d)], axis=1)
+                order = np.argsort(all_d, axis=1, kind="stable")[:, :L]
+                cand_ids = np.take_along_axis(all_ids, order, 1)
+                cand_d = np.take_along_axis(all_d, order, 1)
+                cand_exp = np.take_along_axis(all_exp, order, 1)
+        # re-rank over every expanded node, in expansion order (stable ties)
+        out = np.full((nq, k), -1, np.int64)
+        if pool_ids_cols:
+            pool_ids = np.concatenate(pool_ids_cols, axis=1)
+            pool_d = np.concatenate(pool_d_cols, axis=1)
+            for i in range(nq):
+                vmask = pool_ids[i] >= 0
+                vids, vd = pool_ids[i][vmask], pool_d[i][vmask]
+                top = vids[np.argsort(vd, kind="stable")[:k]]
+                out[i, :top.size] = top
+        wall = time.perf_counter() - t0
+        stats = []
+        for i in range(nq):
+            stats.append(SearchStats(
+                hops=int(hops_a[i]), ios=int(ios_a[i]),
+                bytes_read=int(bytes_a[i]), pq_dists=int(pq_a[i]),
+                latency_s=wall / nq, syscalls=int(sys_a[i]),
+                cache_hits=int(hit_a[i]), cache_misses=int(miss_a[i])))
+        return out, stats
+
+    def search_batch_ref(self, Q: np.ndarray, k: int, L: int, w: int = 4):
+        """Scalar reference loop (the seed implementation's search_batch)."""
         ids = np.zeros((Q.shape[0], k), dtype=np.int64)
         stats = []
         for i in range(Q.shape[0]):
-            ids[i], s = self.search(Q[i], k, L, w)
+            ids[i], s = self.search_ref(Q[i], k, L, w)
             stats.append(s)
         return ids, stats
 
 
+def _group_rank(group_ids: np.ndarray) -> np.ndarray:
+    """Rank within consecutive groups: [3,3,5,5,5,7] -> [0,1,0,1,2,0].
+    `group_ids` must be non-decreasing (row-major np.nonzero guarantees it).
+    """
+    if group_ids.size == 0:
+        return group_ids
+    starts = np.flatnonzero(
+        np.concatenate([[True], group_ids[1:] != group_ids[:-1]]))
+    return np.arange(group_ids.size) - np.repeat(
+        starts, np.diff(np.concatenate([starts, [group_ids.size]])))
+
+
 def recall_at(ids: np.ndarray, gt: np.ndarray, k: int) -> float:
-    """k-recall@k over a batch: |pred_k ∩ gt_k| / k averaged."""
-    hits = 0
-    for row_p, row_g in zip(ids[:, :k], gt[:, :k]):
-        hits += len(set(map(int, row_p)) & set(map(int, row_g)))
-    return hits / (ids.shape[0] * k)
+    """k-recall@k over a batch: |pred_k ∩ gt_k| / k averaged (vectorized)."""
+    p, g = ids[:, :k], gt[:, :k]
+    srt = np.sort(p, axis=1)
+    if k > 1 and (srt[:, 1:] == srt[:, :-1]).any():
+        # duplicate predictions: fall back to exact set semantics
+        hits = sum(len(set(map(int, rp)) & set(map(int, rg)))
+                   for rp, rg in zip(p, g))
+        return hits / (ids.shape[0] * k)
+    hits = (p[:, :, None] == g[:, None, :]).any(axis=2).sum()
+    return float(hits) / (ids.shape[0] * k)

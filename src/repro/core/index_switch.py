@@ -59,6 +59,10 @@ class IndexManager:
         assert self.active is not None, "switch() to a corpus first"
         return self.active.search(q, k, L, w)
 
+    def search_batch(self, Q, k: int, L: int, w: int = 4):
+        assert self.active is not None, "switch() to a corpus first"
+        return self.active.search_batch(Q, k, L, w)
+
     def resident_bytes(self) -> int:
         return 0 if self.active is None else self.active.resident_bytes()
 

@@ -67,7 +67,7 @@ def sharded_search_fn(mesh, *, k: int, L: int, w: int, max_hops: int,
                       layout: ChunkLayout, metric: str, backend: str = "auto",
                       query_axes: Tuple[str, ...] = ("data",),
                       shard_axes: Tuple[str, ...] = ("model",),
-                      query_chunk: int = 0):
+                      query_chunk: int = 0, adc_dtype: str = "f32"):
     """Returns a jit-able fn(arrays: ShardedIndexArrays, queries) -> ids, d.
 
     queries: (B, d) sharded over query_axes (may be empty => replicated —
@@ -77,6 +77,7 @@ def sharded_search_fn(mesh, *, k: int, L: int, w: int, max_hops: int,
     query_chunk > 0 processes queries in chunks inside lax.map, bounding the
     per-query visited-bitmap working set (nq_chunk x N_shard bools).
     """
+    query_axes = _norm_axes(query_axes)
     qspec = P(query_axes, None) if query_axes else P(None, None)
     sspec = P(shard_axes, None, None)
 
@@ -88,7 +89,7 @@ def sharded_search_fn(mesh, *, k: int, L: int, w: int, max_hops: int,
         def one_chunk(qc):
             ids, d, hops = beam_search_device(
                 idx, qc, k=k, L=L, w=w, max_hops=max_hops, layout=layout,
-                metric=metric, backend=backend)
+                metric=metric, backend=backend, adc_dtype=adc_dtype)
             return ids, d
 
         nq = queries.shape[0]
@@ -124,12 +125,20 @@ def sharded_search_fn(mesh, *, k: int, L: int, w: int, max_hops: int,
     return search
 
 
+def _norm_axes(axes) -> Tuple[str, ...]:
+    """Drop None placeholders: (None,) means 'replicated', which older JAX
+    only accepts as an empty spec (P(None) rather than P((None,)))."""
+    return tuple(a for a in (axes or ()) if a is not None)
+
+
 def input_sharding(mesh, query_axes=("data",), shard_axes=("model",)):
     """NamedShardings for placing ShardedIndexArrays + queries on the mesh."""
+    query_axes = _norm_axes(query_axes)
+    qspec = P(query_axes, None) if query_axes else P(None, None)
     return ShardedIndexArrays(
         chunk_words=NamedSharding(mesh, P(shard_axes, None, None)),
         centroids=NamedSharding(mesh, P()),
         ep_ids=NamedSharding(mesh, P(shard_axes, None)),
         ep_codes=NamedSharding(mesh, P(shard_axes, None, None)),
         offsets=NamedSharding(mesh, P(shard_axes)),
-    ), NamedSharding(mesh, P(query_axes, None))
+    ), NamedSharding(mesh, qspec)

@@ -20,9 +20,8 @@ from jax.experimental.shard_map import shard_map
 
 
 def make_pp_mesh(n_stages: int, n_data: int = 1):
-    from jax.sharding import AxisType
-    return jax.make_mesh((n_stages, n_data), ("pp", "data"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    return make_mesh_compat((n_stages, n_data), ("pp", "data"))
 
 
 def pipeline_forward(mesh: Mesh, stage_fn: Callable, n_microbatches: int):

@@ -25,6 +25,20 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.chunk_layout import ChunkLayout
 
 
+def quantize_lut(lut: jax.Array):
+    """Symmetric per-query int8 LUT quantization (§Perf adc-int8).
+
+    lut (nq, m, ks) f32 -> (lut_q8 (nq, m, ks) int8, scale (nq,) f32);
+    dequantization is lut_q8 * (scale / 127). The single source of truth
+    for the recipe — the Pallas kernel and the ref-backend emulation in
+    kernels.ops must stay numerically identical.
+    """
+    scale = jnp.max(jnp.abs(lut), axis=(1, 2))
+    lut_q8 = jnp.clip(jnp.round(lut / jnp.maximum(
+        scale[:, None, None], 1e-20) * 127.0), -127, 127).astype(jnp.int8)
+    return lut_q8, scale
+
+
 def _unpack_u8(words: jax.Array) -> jax.Array:
     # no captured consts allowed in pallas kernels: build shifts via iota
     shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 4), 1) * 8
@@ -111,9 +125,7 @@ def fused_hop(chunk_words: jax.Array, frontier_ids: jax.Array,
     ]
     args = [frontier_ids, chunk_words]
     if quantized:
-        scale = jnp.max(jnp.abs(lut), axis=(1, 2))        # (nq,)
-        lut_in = jnp.clip(jnp.round(lut / jnp.maximum(
-            scale[:, None, None], 1e-20) * 127.0), -127, 127).astype(jnp.int8)
+        lut_in, scale = quantize_lut(lut)
         in_specs.append(pl.BlockSpec((1, 1), lambda q, i, ids: (q, 0)))
         args += [lut_in, queries.astype(jnp.float32),
                  (scale / 127.0)[:, None]]

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from repro.core.chunk_layout import ChunkLayout
 from repro.kernels import ref as _ref
-from repro.kernels.chunk_adc import fused_hop as _fused_hop_pallas
+from repro.kernels.chunk_adc import fused_hop as _fused_hop_pallas, \
+    quantize_lut
 from repro.kernels.pq_adc import pq_adc as _pq_adc_pallas
 from repro.kernels.pq_lut import pq_lut as _pq_lut_pallas
 from repro.kernels.rerank import rerank as _rerank_pallas
@@ -56,15 +57,26 @@ def adc(lut: jax.Array, codes: jax.Array, *, backend: str = "auto"
 
 def fused_hop(chunk_words: jax.Array, frontier_ids: jax.Array, lut: jax.Array,
               queries: jax.Array, *, layout: ChunkLayout, metric: str = "l2",
-              backend: str = "auto"):
-    """Batched AiSAQ hop. frontier_ids (nq, w) -> see chunk_adc.fused_hop."""
+              backend: str = "auto", adc_dtype: str = "f32"):
+    """Batched AiSAQ hop. frontier_ids (nq, w) -> see chunk_adc.fused_hop.
+
+    adc_dtype="int8" runs the §Perf adc-int8 path: per-query symmetric LUT
+    quantization, s8xs8->s32 one-hot contraction at 2x MXU rate. The ref
+    backend emulates the identical numerics (quantize + dequantize the LUT)
+    so recall-parity tests run anywhere.
+    """
+    assert adc_dtype in ("f32", "int8"), adc_dtype
     b = _resolve(backend)
     if b == "ref":
+        if adc_dtype == "int8":
+            lut_q8, scale = quantize_lut(lut)
+            lut = lut_q8.astype(jnp.float32) * (scale / 127.0)[:, None, None]
         fn = functools.partial(_ref.fused_hop_ref, chunk_words,
                                layout=layout, metric=metric)
         return jax.vmap(fn)(frontier_ids, lut, queries)
     return _fused_hop_pallas(chunk_words, frontier_ids, lut, queries,
                              layout=layout, metric=metric,
+                             quantized=(adc_dtype == "int8"),
                              interpret=(b == "pallas_interpret"))
 
 

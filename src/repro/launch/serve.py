@@ -53,10 +53,8 @@ def main(argv=None):
     mgr = IndexManager(paths)
 
     def search(queries, k):
-        out = np.zeros((queries.shape[0], k), np.int64)
-        for i in range(queries.shape[0]):
-            out[i], _ = mgr.search(queries[i], k, L=args.L)
-        return out
+        ids, _ = mgr.search_batch(queries, k, L=max(args.L, k))
+        return ids
 
     eng = ServingEngine({c: search for c in paths}, switch_fn=mgr.switch,
                         max_batch=args.max_batch, hedge=args.hedge,

@@ -18,6 +18,36 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 
+def make_device_search_fn(index, layout, *, metric: str = "l2", L: int = 48,
+                          w: int = 4, max_hops: int = 128,
+                          backend: str = "auto", adc_dtype: str = "f32"):
+    """Wrap the device beam search into the `(queries, k) -> ids` callable
+    `ServingEngine` consumes. `adc_dtype="int8"` serves via the int8
+    fused-hop ADC kernel (2x MXU rate) — the public serving entry point for
+    the quantized hot path."""
+    import jax.numpy as jnp
+    from repro.core.device_index import beam_search_device
+
+    def search(queries: np.ndarray, k: int) -> np.ndarray:
+        ids, _, _ = beam_search_device(
+            index, jnp.asarray(queries), k=k, L=max(L, k), w=w,
+            max_hops=max_hops, layout=layout, metric=metric,
+            backend=backend, adc_dtype=adc_dtype)
+        return np.asarray(ids)
+
+    return search
+
+
+def make_host_search_fn(host_index, *, L: int = 48, w: int = 4):
+    """Wrap `HostIndex.search_batch` (the vectorized storage-backed path)
+    into the `(queries, k) -> ids` callable `ServingEngine` consumes."""
+    def search(queries: np.ndarray, k: int) -> np.ndarray:
+        ids, _ = host_index.search_batch(queries, k, L=max(L, k), w=w)
+        return ids
+
+    return search
+
+
 @dataclass
 class Request:
     query: np.ndarray

@@ -35,7 +35,8 @@ cents = np.asarray(cb.centroids); codes = np.asarray(pq.encode(cb, base))
 lay = ChunkLayout('aisaq', 32, 'float32', 16, 8)
 shards = build_sharded(base, 4, R=16, L=32, seed=0)
 arrays = stack_shards(shards, cents, codes, lay)
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ('data', 'model'))
 search = sharded_search_fn(mesh, k=10, L=48, w=4, max_hops=64, layout=lay, metric='l2', backend='ref')
 ash, qsh = input_sharding(mesh)
 arrays = jax.tree.map(lambda a, s: jax.device_put(a, s), arrays, ash)
@@ -120,7 +121,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.distributed.compression import compressed_psum
-mesh = jax.make_mesh((8,), ('data',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((8,), ('data',))
 rng = np.random.default_rng(0)
 g = jnp.asarray(rng.normal(size=(8, 4096)).astype(np.float32))
 def local(gs):
@@ -235,7 +237,8 @@ cents = np.asarray(cb.centroids); codes = np.asarray(pq.encode(cb, base))
 lay = ChunkLayout('aisaq', 32, 'float32', 16, 8)
 shards = build_sharded(base, 8, R=16, L=32, seed=0)
 arrays = stack_shards(shards, cents, codes, lay)
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ('data', 'model'))
 search = sharded_search_fn(mesh, k=10, L=48, w=4, max_hops=64, layout=lay,
                            metric='l2', backend='ref', query_axes=(),
                            shard_axes=('data', 'model'), query_chunk=8)
