@@ -50,13 +50,18 @@ def graph(base):
     return g
 
 
-def index_path(mode: str, m: int) -> str:
-    return os.path.join(IDX, f"{mode}_m{m}")
+def index_path(mode: str, m: int, relabel: bool = False) -> str:
+    return os.path.join(IDX, f"{mode}_m{m}" + ("_rl" if relabel else ""))
 
 
 def ensure_indices(ms=(DEFAULT_M,), modes=("aisaq", "diskann"),
-                   shared_centroids_for=None):
-    """Build (cached) indices for each (mode, m). Returns paths dict."""
+                   shared_centroids_for=None, relabel=False):
+    """Build (cached) indices for each (mode, m). Returns paths dict.
+
+    `relabel=True` builds the graph-locality-relabeled twins (same graph,
+    same codes, permuted placement) into separate `*_rl` directories so
+    the cold-path benchmark can compare the two layouts directly.
+    """
     import jax
     from repro.core import pq
     from repro.core.index_io import write_index
@@ -66,7 +71,7 @@ def ensure_indices(ms=(DEFAULT_M,), modes=("aisaq", "diskann"),
     for m in ms:
         cache = {}
         for mode in modes:
-            p = index_path(mode, m)
+            p = index_path(mode, m, relabel)
             paths[(mode, m)] = p
             if os.path.exists(os.path.join(p, "meta.json")):
                 continue
@@ -76,7 +81,8 @@ def ensure_indices(ms=(DEFAULT_M,), modes=("aisaq", "diskann"),
                 cache["cents"] = np.asarray(cb.centroids)
                 cache["codes"] = np.asarray(pq.encode(cb, base))
             write_index(p, vectors=base, graph=g, centroids=cache["cents"],
-                        codes=cache["codes"], metric="l2", mode=mode)
+                        codes=cache["codes"], metric="l2", mode=mode,
+                        relabel=relabel)
     return paths
 
 

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a hot-path benchmark smoke run.
+#
+# The smoke invocation rebuilds a tiny corpus from scratch and asserts the
+# search hot-path invariants (batched == scalar reference across
+# {relabel} x {prefetch} x {adc_dtype}, int8 recall parity), so a hot-path
+# regression fails CI loudly even when no unit test covers the exact
+# combination that broke.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+bash scripts/tier1.sh
+
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_search.py --quick

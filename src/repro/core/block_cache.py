@@ -1,4 +1,4 @@
-"""Byte-budgeted LRU block cache + batched block I/O for the host backend.
+"""Byte-budgeted LRU block cache + batched block I/O + async prefetch.
 
 The paper's host tier reads one ``io_bytes`` unit (>= one 4 KiB LBA block)
 per node expansion. The seed implementation paid one ``os.pread`` syscall
@@ -10,21 +10,39 @@ per *node*; this cache turns the per-hop frontier into ONE batched fetch:
     host budget made explicit),
   * cache misses are sorted, deduplicated, coalesced into contiguous runs,
     and each run is read with a single ``os.preadv`` — one syscall fills
-    every block buffer of the run (``preadv`` scatters a contiguous file
-    range across buffers; discontiguous runs need one call each, which the
-    syscall counter reports honestly).
+    every block buffer of the run. ``gap`` > 0 additionally merges runs
+    separated by up to that many absent blocks and reads the hole blocks
+    along (readahead): with a graph-locality-relabeled layout the per-hop
+    miss set is clustered, so a handful of gap-tolerant runs replaces
+    dozens of exact ones, and the hole blocks land in the cache as
+    speculative residents that later hops hit,
+  * ``prefetch_async`` moves speculative next-hop reads off the demand
+    path: a background thread reads queued blocks with the same coalesced
+    preadv discipline and lands them in the LRU. A demand fetch that wants
+    a block already *in flight* WAITS for the background read instead of
+    duplicating it (condition-variable handoff — the double-buffer
+    discipline), so every block is read from storage at most once.
 
-Counters (`hits`, `misses`, `evictions`, `syscalls`, `bytes_read`) feed
-``SearchStats`` and the bench_search report.
+Speculation is accounted honestly: ``prefetch_syscalls``/``prefetch_bytes``
+count background I/O, ``prefetch_issued`` counts speculatively landed
+blocks (background reads + readahead holes), ``prefetch_hits`` counts
+those a demand fetch actually consumed, ``prefetch_wasted`` those evicted,
+cleared, or invalidated unused. Counters feed ``SearchStats`` and the
+bench_search report.
 """
 from __future__ import annotations
 
 import os
+import threading
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Tuple
+from queue import Queue
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
+
+_PENDING_WAIT_S = 0.5       # bound on waiting for an in-flight prefetch
 
 
 @dataclass
@@ -32,13 +50,25 @@ class CacheCounters:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
-    syscalls: int = 0
-    bytes_read: int = 0
+    syscalls: int = 0        # demand-path preadv calls (block the search)
+    bytes_read: int = 0      # demand-path bytes pulled from storage
     fetch_calls: int = 0     # batched fetch() invocations (one per hop)
+    prefetch_issued: int = 0     # speculative blocks landed (async + holes)
+    prefetch_syscalls: int = 0   # preadv calls issued off the demand path
+    prefetch_bytes: int = 0      # bytes read off the demand path
+    prefetch_hits: int = 0       # speculative blocks a demand fetch consumed
+    prefetch_wasted: int = 0     # speculative blocks dropped unused
 
-    def snapshot(self) -> Tuple[int, int, int, int, int, int]:
+    def snapshot(self) -> Tuple[int, ...]:
         return (self.hits, self.misses, self.evictions, self.syscalls,
-                self.bytes_read, self.fetch_calls)
+                self.bytes_read, self.fetch_calls, self.prefetch_issued,
+                self.prefetch_syscalls, self.prefetch_bytes,
+                self.prefetch_hits, self.prefetch_wasted)
+
+    def reset(self):
+        """Zero every counter in place (phase boundaries in benchmarks)."""
+        for f in self.__dataclass_fields__:
+            setattr(self, f, 0)
 
 
 class BlockCache:
@@ -46,6 +76,8 @@ class BlockCache:
 
     capacity_bytes == 0 disables retention but keeps the batched coalesced
     read path (every fetch is a miss); the syscall batching win remains.
+    All mutation of the resident set is guarded by one condition variable
+    so the background prefetcher and the demand path compose safely.
     """
 
     def __init__(self, fd: int, io_bytes: int,
@@ -56,6 +88,11 @@ class BlockCache:
         self.max_entries = self.capacity_bytes // self.io_bytes
         self._blocks: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.counters = CacheCounters()
+        self._cond = threading.Condition()
+        self._prefetched: Set[int] = set()   # resident but not yet demanded
+        self._inflight: Set[int] = set()     # queued for background read
+        self._pf_queue: Optional[Queue] = None
+        self._pf_thread: Optional[threading.Thread] = None
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -63,70 +100,251 @@ class BlockCache:
         return len(self._blocks) * self.io_bytes
 
     def hit_rate(self) -> float:
+        """Demand-path hit rate; 0.0 (not NaN/ZeroDivisionError) when no
+        fetch has happened yet."""
         c = self.counters
         total = c.hits + c.misses
-        return c.hits / total if total else 0.0
+        return float(c.hits) / total if total > 0 else 0.0
 
     def clear(self):
-        self._blocks.clear()
+        with self._cond:
+            self.counters.prefetch_wasted += len(self._prefetched)
+            self._prefetched.clear()
+            self._inflight.clear()           # in-flight reads land nowhere
+            self._blocks.clear()
+            self._cond.notify_all()
 
     def invalidate(self, start: int, nbytes: int):
         """Drop any cached I/O unit overlapping [start, start+nbytes) —
-        required after in-place chunk writes (dynamic index mutation)."""
+        required after in-place chunk writes (dynamic index mutation).
+        Handles ranges that straddle block boundaries: every block touched
+        by ANY byte of the range is dropped, including the partial first
+        and last blocks. nbytes <= 0 is a no-op. Pending prefetches of the
+        range are cancelled so a stale in-flight read can never land."""
+        if nbytes <= 0:
+            return
         io = self.io_bytes
         first = start // io * io
-        for off in range(first, start + max(1, nbytes), io):
-            self._blocks.pop(off, None)
+        last = (start + nbytes - 1) // io * io
+        with self._cond:
+            for off in range(first, last + io, io):
+                self._blocks.pop(off, None)
+                self._inflight.discard(off)
+                if off in self._prefetched:
+                    self._prefetched.discard(off)
+                    self.counters.prefetch_wasted += 1
+            self._cond.notify_all()
 
-    # -- the batched fetch ---------------------------------------------------
-    def fetch(self, offsets: np.ndarray,
+    # -- coalesced preadv ----------------------------------------------------
+    def _read_runs(self, offs: np.ndarray, gap: int
+                   ) -> Tuple[Dict[int, np.ndarray], Dict[int, np.ndarray],
+                              int, int]:
+        """preadv over sorted unique block offsets, one call per run. Runs
+        separated by <= `gap` absent blocks are merged; the hole blocks are
+        read along and returned separately (readahead). Returns
+        (wanted off->buf, holes off->buf, syscalls, bytes)."""
+        io = self.io_bytes
+        want: Dict[int, np.ndarray] = {}
+        holes: Dict[int, np.ndarray] = {}
+        n_sys = 0
+        nbytes = 0
+        if not offs.size:
+            return want, holes, n_sys, nbytes
+        span = (gap + 1) * io
+        run_start = 0
+        for i in range(1, offs.size + 1):
+            if i == offs.size or offs[i] - offs[i - 1] > span:
+                lo, hi = int(offs[run_start]), int(offs[i - 1])
+                nblk = (hi - lo) // io + 1
+                bufs = [np.empty(io, np.uint8) for _ in range(nblk)]
+                got = os.preadv(self.fd, bufs, lo)
+                n_sys += 1
+                nbytes += int(got)
+                asked = set(offs[run_start:i].tolist())
+                for j in range(nblk):
+                    o = lo + j * io
+                    (want if o in asked else holes)[o] = bufs[j]
+                run_start = i
+        return want, holes, n_sys, nbytes
+
+    # -- the batched demand fetch -------------------------------------------
+    def fetch(self, offsets: np.ndarray, gap: int = 0,
               ) -> Tuple[np.ndarray, np.ndarray, int]:
         """Fetch the I/O units starting at `offsets` (block-aligned, may
         repeat). Returns (data (B, io_bytes) uint8, hit mask over the
-        *unique* offsets in first-appearance order, syscalls issued)."""
+        *unique* offsets in first-appearance order, syscalls issued).
+
+        A unique offset counts as a hit when it was served without demand
+        I/O — resident, or landed by an in-flight background prefetch this
+        fetch waited on. `gap` > 0 enables readahead coalescing of the
+        miss runs (see class docstring)."""
         offsets = np.asarray(offsets, dtype=np.int64)
-        self.counters.fetch_calls += 1
+        c = self.counters
+        c.fetch_calls += 1
         uniq, first = np.unique(offsets, return_index=True)
         # first-appearance order (np.unique sorts; undo for caller attribution)
         order = np.argsort(first, kind="stable")
         uniq = uniq[order]
-        c = self.counters
-        hit_mask = np.array([int(o) in self._blocks for o in uniq],
-                            dtype=bool)
-        miss_offs = np.sort(uniq[~hit_mask])
-        n_sys = 0
-        stash = {}
-        if miss_offs.size:
-            io = self.io_bytes
-            run_start = 0
-            for i in range(1, miss_offs.size + 1):
-                if i == miss_offs.size or \
-                        miss_offs[i] != miss_offs[i - 1] + io:
-                    run = miss_offs[run_start:i]
-                    run_bufs = [np.empty(io, np.uint8) for _ in run]
-                    got = os.preadv(self.fd, run_bufs, int(run[0]))
-                    n_sys += 1
-                    c.bytes_read += int(got)
-                    stash.update(zip(run.tolist(), run_bufs))
-                    run_start = i
+        local: Dict[int, np.ndarray] = {}
+        pending: List[int] = []
+        miss: List[int] = []
+        with self._cond:
+            for o in uniq.tolist():
+                buf = self._blocks.get(o)
+                if buf is not None:
+                    self._blocks.move_to_end(o)
+                    local[o] = buf
+                    if o in self._prefetched:
+                        self._prefetched.discard(o)
+                        c.prefetch_hits += 1
+                elif o in self._inflight:
+                    pending.append(o)        # background read is coming
+                else:
+                    miss.append(o)
+        want, holes, n_sys, nbytes = self._read_runs(
+            np.asarray(sorted(miss), dtype=np.int64), gap)
+        local.update(want)
         c.syscalls += n_sys
+        c.bytes_read += nbytes
+        # wait for in-flight prefetches instead of duplicating their I/O
+        if pending:
+            deadline = time.monotonic() + _PENDING_WAIT_S
+            with self._cond:
+                while True:
+                    still = [o for o in pending if o not in local]
+                    for o in still:
+                        buf = self._blocks.get(o)
+                        if buf is not None:
+                            self._blocks.move_to_end(o)
+                            local[o] = buf
+                            if o in self._prefetched:
+                                self._prefetched.discard(o)
+                                c.prefetch_hits += 1
+                    still = [o for o in pending if o not in local
+                             and o in self._inflight]
+                    if not still:
+                        break
+                    left = deadline - time.monotonic()
+                    if left <= 0 or not self._cond.wait(timeout=left):
+                        break
+            # cancelled (invalidate/clear/stop) or timed out: read directly
+            fallback = np.asarray(sorted(o for o in pending
+                                         if o not in local), dtype=np.int64)
+            if fallback.size:
+                fb, fb_holes, fb_sys, fb_bytes = self._read_runs(fallback, 0)
+                local.update(fb)
+                miss.extend(fallback.tolist())
+                n_sys += fb_sys
+                c.syscalls += fb_sys
+                c.bytes_read += fb_bytes
+        missed = set(miss)
+        hit_mask = np.asarray([o not in missed for o in uniq.tolist()],
+                              dtype=bool)
         c.hits += int(hit_mask.sum())
-        c.misses += int(miss_offs.size)
+        c.misses += len(missed)
         # assemble BEFORE inserting: inserting misses may evict blocks this
         # very fetch still needs when the budget is smaller than the batch
         out = np.empty((offsets.size, self.io_bytes), np.uint8)
         for i, off in enumerate(offsets.tolist()):
-            out[i] = stash[off] if off in stash else self._get(off)
-        for off, buf in stash.items():
-            self._insert(off, buf)
+            out[i] = local[off]
+        with self._cond:
+            for off in miss:
+                self._inflight.discard(off)  # demand read beat the prefetch
+                self._insert(off, local[off])
+            # readahead holes: speculative insert (skipped entirely under
+            # zero retention — an unretainable block is not speculation)
+            if self.max_entries:
+                for off, buf in holes.items():
+                    # the demand read covered it: cancel any queued
+                    # background read so storage sees each block once
+                    self._inflight.discard(off)
+                    if off not in self._blocks:
+                        c.prefetch_issued += 1
+                        self._prefetched.add(off)
+                        self._insert(off, buf)
         return out, hit_mask, n_sys
 
-    # -- LRU internals -------------------------------------------------------
-    def _get(self, off: int) -> np.ndarray:
-        blk = self._blocks[off]
-        self._blocks.move_to_end(off)
-        return blk
+    # -- async prefetch ------------------------------------------------------
+    def prefetch_async(self, offsets: np.ndarray) -> int:
+        """Queue speculative background reads of block-aligned `offsets`.
 
+        Already-resident and already-queued blocks are skipped; returns the
+        number of blocks actually queued. No-op when retention is disabled
+        (a zero-budget cache could never serve the prefetched block) and
+        when a backlog of unprocessed batches exists (stale speculation is
+        worse than none: it evicts useful residents)."""
+        if self.max_entries == 0:
+            return 0
+        if self._pf_queue is not None and self._pf_queue.qsize() > 2:
+            return 0
+        offsets = np.unique(np.asarray(offsets, dtype=np.int64))
+        with self._cond:
+            todo = [int(o) for o in offsets.tolist()
+                    if o not in self._blocks and o not in self._inflight]
+            self._inflight.update(todo)
+        if not todo:
+            return 0
+        self._ensure_worker()
+        self._pf_queue.put(np.asarray(todo, dtype=np.int64))
+        return len(todo)
+
+    def wait_prefetch(self):
+        """Block until every queued prefetch batch has landed (used by
+        tests and phase boundaries in benchmarks)."""
+        if self._pf_queue is not None:
+            self._pf_queue.join()
+
+    def stop(self):
+        """Join the background thread (idempotent; called by close())."""
+        if self._pf_thread is not None and self._pf_thread.is_alive():
+            self._pf_queue.put(None)
+            self._pf_thread.join(timeout=10.0)
+        self._pf_thread = None
+        self._pf_queue = None
+        with self._cond:
+            self._inflight.clear()           # nothing can land any more
+            self._cond.notify_all()
+
+    def _ensure_worker(self):
+        if self._pf_thread is None or not self._pf_thread.is_alive():
+            self._pf_queue = Queue()
+            self._pf_thread = threading.Thread(
+                target=self._pf_loop, name="blockcache-prefetch", daemon=True)
+            self._pf_thread.start()
+
+    def _pf_loop(self):
+        q = self._pf_queue
+        while True:
+            batch = q.get()
+            if batch is None:
+                q.task_done()
+                return
+            try:
+                self._pf_read(batch)
+            finally:
+                q.task_done()
+
+    def _pf_read(self, batch: np.ndarray):
+        with self._cond:                     # drop cancelled offsets cheaply
+            offs = np.asarray(sorted(int(o) for o in batch.tolist()
+                                     if o in self._inflight), dtype=np.int64)
+        bufs, _, n_sys, nbytes = self._read_runs(offs, 0)
+        with self._cond:
+            c = self.counters
+            c.prefetch_syscalls += n_sys
+            c.prefetch_bytes += nbytes
+            for off, buf in bufs.items():
+                if off not in self._inflight:
+                    continue                 # invalidated/cleared mid-flight
+                self._inflight.discard(off)
+                if off in self._blocks:
+                    continue                 # a demand read got there first
+                c.prefetch_issued += 1
+                self._prefetched.add(off)
+                self._insert(off, buf)
+            self._cond.notify_all()          # wake demand fetches waiting
+
+    # -- LRU internals (caller holds self._cond) -----------------------------
     def _insert(self, off: int, buf: np.ndarray):
         if self.max_entries == 0:
             return
@@ -134,6 +352,9 @@ class BlockCache:
             self._blocks.move_to_end(off)
             return
         while len(self._blocks) >= self.max_entries:
-            self._blocks.popitem(last=False)
+            old, _ = self._blocks.popitem(last=False)
             self.counters.evictions += 1
+            if old in self._prefetched:
+                self._prefetched.discard(old)
+                self.counters.prefetch_wasted += 1
         self._blocks[off] = buf

@@ -17,12 +17,16 @@ from repro.core.vamana import build_vamana, medoid
 def build_index(path: str, vectors: np.ndarray, cfg: IndexConfig, *,
                 mode: Optional[str] = None, seed: int = 0,
                 shared_centroids: Optional[np.ndarray] = None,
-                graph: Optional[np.ndarray] = None, verbose: bool = False
-                ) -> dict:
+                graph: Optional[np.ndarray] = None, verbose: bool = False,
+                relabel: bool = False) -> dict:
     """Build one index directory from raw vectors.
 
     `shared_centroids` lets multiple corpora in the same vector space share
-    PQ centroids (paper §4.4). Returns the meta dict (plus timing fields).
+    PQ centroids (paper §4.4). `relabel=True` applies the graph-locality
+    page-packing permutation at pack time (core.relabel) — cold-path reads
+    per hop drop because co-expanded neighbors share I/O blocks; search
+    results still come back under the original vector labels. Returns the
+    meta dict (plus timing fields).
     """
     mode = mode or cfg.mode
     t0 = time.perf_counter()
@@ -47,7 +51,7 @@ def build_index(path: str, vectors: np.ndarray, cfg: IndexConfig, *,
     meta = write_index(path, vectors=vectors, graph=graph,
                        centroids=centroids, codes=codes, metric=cfg.metric,
                        mode=mode, block_bytes=cfg.block_bytes, n_ep=cfg.n_ep,
-                       entry_points=ep,
+                       entry_points=ep, relabel=relabel,
                        extra_meta=dict(build_pq_s=t_pq, build_graph_s=t_graph))
     if verbose:
         print(f"built {path}: n={n} pq={t_pq:.1f}s graph={t_graph:.1f}s")

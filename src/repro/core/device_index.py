@@ -91,6 +91,18 @@ def load_device_index(path: str) -> Tuple[DeviceIndex, ChunkLayout, str]:
     graph = np.ascontiguousarray(
         chunks[:, layout.off_ids:layout.off_ids + layout.R * 4]) \
         .view(np.int32).reshape(n, layout.R)
+    if meta.get("relabeled"):
+        # locality-relabeled index: undo the pack-time permutation so the
+        # device tier works (and returns ids) in ORIGINAL label space —
+        # HBM gathers don't care about file-page locality anyway
+        from repro.core.relabel import invert_permutation
+        old_to_new = np.load(os.path.join(path, "id_map.npy"))
+        new_to_old = invert_permutation(old_to_new)
+        vecs = vecs[old_to_new]
+        codes = codes[old_to_new]
+        g = graph[old_to_new]
+        graph = np.where(g >= 0, new_to_old[np.where(g >= 0, g, 0)],
+                         -1).astype(np.int32)
     idx, layout = from_arrays(vecs, graph, centroids, codes,
                               mode=meta["mode"],
                               block_bytes=meta["block_bytes"])

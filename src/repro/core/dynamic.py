@@ -34,6 +34,8 @@ class DynamicHostIndex(HostIndex):
     def load(cls, path: str, **kw) -> "DynamicHostIndex":
         self = super().load(path, **kw)  # type: ignore[misc]
         assert self.meta["mode"] == "aisaq", "dynamic ops need inline codes"
+        assert self.new_to_old is None, \
+            "dynamic ops need original-id layout (rebuild without relabel)"
         os.close(self.fd)
         self.fd = os.open(os.path.join(path, "chunks.bin"), os.O_RDWR)
         if self.cache is not None:

@@ -59,6 +59,60 @@ def np_adc(lut: np.ndarray, codes: np.ndarray) -> np.ndarray:
     return lut[np.arange(m), codes.astype(np.int64)].sum(axis=-1)
 
 
+def np_quantize_lut(lut: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """numpy twin of ``kernels.chunk_adc.quantize_lut`` — the SAME recipe
+    (symmetric per-query int8, scale = max|lut|, dequant = q8 * scale/127),
+    kept jax-free so the host backend never pays jit costs. A parity test
+    pins the two implementations together.
+
+    lut (..., m, ks) f32 -> (lut_q8 (..., m, ks) int8, scale (...,) f32).
+    """
+    lut = np.asarray(lut, dtype=np.float32)
+    scale = np.abs(lut).max(axis=(-2, -1))
+    lut_q8 = np.clip(np.round(
+        lut / np.maximum(scale[..., None, None], np.float32(1e-20))
+        * np.float32(127.0)), -127, 127).astype(np.int8)
+    return lut_q8, scale.astype(np.float32)
+
+
+def np_adc_int8(lut_q8: np.ndarray, scale: np.ndarray,
+                codes: np.ndarray) -> np.ndarray:
+    """Host int8 ADC over a quantized LUT.
+
+    lut_q8 (m, ks) int8, codes (..., m) -> (...,) f32. A scalar `scale`
+    reproduces the device int8 fused-hop numerics exactly (int32
+    accumulation + ONE rescale — what the MXU one-hot contraction needs);
+    a per-subspace (m,) `scale` is the finer host granularity (gathers on
+    the host aren't tied to a single-scale contraction).
+    """
+    m = lut_q8.shape[0]
+    g = lut_q8[np.arange(m), codes.astype(np.int64)]
+    scale = np.asarray(scale, dtype=np.float32)
+    if scale.ndim == 0:
+        return g.astype(np.int32).sum(axis=-1).astype(np.float32) \
+            * (scale * np.float32(1 / 127))
+    return (g.astype(np.float32) * (scale * np.float32(1 / 127))).sum(axis=-1)
+
+
+def np_host_lut_int8(lut: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """The host search path's int8 LUT: per-(query, subspace) mid-centered
+    symmetric quantization through the SAME clip/round recipe as the
+    device ``quantize_lut`` (np_quantize_lut applied per subspace row).
+
+    Range-reduction (subtract the per-subspace minimum, center on the
+    half-range) shifts every ADC distance of a query by one constant —
+    ranking-invariant, so beam search is unaffected — while shrinking the
+    quantization step from max|lut|/127 to (subspace range)/254.
+
+    lut (..., m, ks) f32 -> (lut_q8 (..., m, ks) int8, scale (..., m) f32).
+    """
+    lut = np.asarray(lut, dtype=np.float32)
+    res = lut - lut.min(axis=-1, keepdims=True)
+    mid = res - res.max(axis=-1, keepdims=True) * np.float32(0.5)
+    q8, scale = np_quantize_lut(mid[..., None, :])
+    return q8[..., 0, :], scale
+
+
 # ---------------------------------------------------------------------------
 # writer
 # ---------------------------------------------------------------------------
@@ -68,8 +122,17 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
                 centroids: np.ndarray, codes: np.ndarray, metric: str,
                 mode: str, block_bytes: int = 4096, n_ep: int = 1,
                 entry_points: Optional[np.ndarray] = None,
+                relabel: bool = False,
                 extra_meta: Optional[dict] = None) -> dict:
-    """Serialize one index. Returns the meta dict."""
+    """Serialize one index. Returns the meta dict.
+
+    ``relabel=True`` applies the graph-locality permutation at pack time
+    (``core.relabel``): chunks.bin, pq_codes.npy, ep_codes.npy and the
+    entry points are all written in NEW-id space; meta.json records
+    ``relabeled: true`` and the old->new map lands in ``id_map.npy`` so
+    loaders map results back to the ORIGINAL labels — relabeling is
+    invisible above the storage layer.
+    """
     os.makedirs(path, exist_ok=True)
     n, d = vectors.shape
     data_dtype = "uint8" if vectors.dtype == np.uint8 else "float32"
@@ -81,6 +144,14 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
         dd = ((vectors.astype(np.float32) - mean) ** 2).sum(axis=1)
         entry_points = np.argsort(dd)[:n_ep]
     entry_points = np.asarray(entry_points, dtype=np.int64)[:n_ep]
+    id_map = None
+    if relabel:
+        from repro.core.relabel import apply_permutation, \
+            locality_permutation
+        id_map = locality_permutation(graph, layout.nodes_per_block,
+                                      entry_points)
+        vectors, graph, codes, entry_points = apply_permutation(
+            id_map, vectors, graph, codes, entry_points)
     with open(os.path.join(path, "chunks.bin"), "wb") as f:
         f.write(pack_chunks_file(vectors, graph, codes, layout))
     np.save(os.path.join(path, "pq_centroids.npy"),
@@ -96,6 +167,11 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
         entry_points=[int(e) for e in entry_points],
         chunk_bytes=layout.chunk_bytes, io_bytes=layout.io_bytes,
         centroids_hash=cent_hash, **(extra_meta or {}))
+    if id_map is not None:
+        # O(N) sidecar, NOT inline json: meta.json must stay ~4 KiB so the
+        # shared-centroids index switch (paper §4.4) stays near-free
+        np.save(os.path.join(path, "id_map.npy"), id_map.astype(np.int64))
+        meta["relabeled"] = True
     with open(os.path.join(path, "meta.json"), "w") as f:
         json.dump(meta, f, indent=1)
     return meta
@@ -116,6 +192,11 @@ class SearchStats:
     syscalls: int = 0       # batched preadv calls issued for this query
     cache_hits: int = 0
     cache_misses: int = 0
+    # speculative next-hop prefetch accounting (whole-batch deltas, folded
+    # into the batch's lead query like syscall attribution)
+    prefetch_issued: int = 0    # blocks landed by the background thread
+    prefetch_hits: int = 0      # prefetched blocks a demand fetch consumed
+    prefetch_wasted: int = 0    # prefetched blocks dropped unused
 
 
 class HostIndex:
@@ -131,6 +212,7 @@ class HostIndex:
         self.path: str = ""
         self.load_time_s: float = 0.0
         self.cache: Optional[BlockCache] = None
+        self.new_to_old: Optional[np.ndarray] = None   # relabeled indices
 
     # -- lifecycle ---------------------------------------------------------
     @classmethod
@@ -165,6 +247,12 @@ class HostIndex:
         else:
             self.centroids = np.load(os.path.join(path, "pq_centroids.npy"))
         self.ep_codes = np.load(os.path.join(path, "ep_codes.npy"))
+        if self.meta.get("relabeled"):
+            # graph-locality relabeled index: storage is in new-id space;
+            # results must be mapped back to the original labels
+            from repro.core.relabel import invert_permutation
+            self.new_to_old = invert_permutation(
+                np.load(os.path.join(path, "id_map.npy")))
         if mode == "diskann":
             # DiskANN residency policy: ALL pq codes pinned in RAM.
             self.pq_codes = np.load(os.path.join(path, "pq_codes.npy"))
@@ -175,11 +263,19 @@ class HostIndex:
         return self
 
     def close(self):
+        if self.cache is not None:
+            self.cache.stop()        # join the prefetch thread first
+            self.cache.clear()
         if self.fd >= 0:
             os.close(self.fd)
             self.fd = -1
-        if self.cache is not None:
-            self.cache.clear()
+
+    def _map_out(self, ids: np.ndarray) -> np.ndarray:
+        """Internal (storage) ids -> original labels (-1 padding kept)."""
+        if self.new_to_old is None:
+            return ids
+        valid = ids >= 0
+        return np.where(valid, self.new_to_old[np.where(valid, ids, 0)], -1)
 
     def cache_bytes_used(self) -> int:
         return 0 if self.cache is None else self.cache.used_bytes
@@ -208,21 +304,29 @@ class HostIndex:
         return np.frombuffer(raw, dtype=np.uint8)[inner:inner + lay.chunk_bytes]
 
     # -- Algorithm 1 (faithful scalar reference) -----------------------------
-    def search_ref(self, q: np.ndarray, k: int, L: int, w: int = 4
+    def search_ref(self, q: np.ndarray, k: int, L: int, w: int = 4, *,
+                   adc_dtype: str = "f32"
                    ) -> Tuple[np.ndarray, SearchStats]:
         """Scalar DiskANN beam search (paper Algorithm 1), one pread per
         node expansion. Kept as the semantics oracle for the vectorized
-        hot path — `search` must return bit-identical ids."""
+        hot path — `search` must return bit-identical ids (per adc_dtype:
+        the int8 oracle pins the int8 hot path)."""
+        assert adc_dtype in ("f32", "int8"), adc_dtype
         t0 = time.perf_counter()
         q = np.asarray(q, dtype=np.float32)   # same arithmetic as `search`
         stats = SearchStats()
         lay = self.layout
         metric = self.meta["metric"]
         lut = np_build_lut(self.centroids, q.astype(np.float32), metric)
+        if adc_dtype == "int8":
+            lut_q8, scale = np_host_lut_int8(lut)
+            adc = lambda codes: np_adc_int8(lut_q8, scale, codes)  # noqa: E731
+        else:
+            adc = lambda codes: np_adc(lut, codes)                 # noqa: E731
         eps = np.asarray(self.meta["entry_points"], dtype=np.int64)
         # candidate list: ids, pq-dists, expanded?
         cand_ids = eps.copy()
-        cand_d = np_adc(lut, self.ep_codes)                  # entry codes: RAM
+        cand_d = adc(self.ep_codes)                          # entry codes: RAM
         stats.pq_dists += len(eps)
         expanded: Dict[int, float] = {}                      # id -> exact dist
         inserted = set(int(e) for e in eps)
@@ -257,7 +361,7 @@ class HostIndex:
                         [int(np.flatnonzero(ids == f)[0]) for f in fresh]]
                 else:
                     codes = self.pq_codes[fresh]
-                d = np_adc(lut, codes)
+                d = adc(codes)
                 stats.pq_dists += int(fresh.size)
                 inserted.update(int(f) for f in fresh)
                 new_ids.append(fresh)
@@ -270,7 +374,7 @@ class HostIndex:
         vd = np.array(list(expanded.values()), dtype=np.float32)
         topk = vids[np.argsort(vd, kind="stable")[:k]]
         stats.latency_s = time.perf_counter() - t0
-        return topk, stats
+        return self._map_out(topk), stats
 
     # -- vectorized hot path -------------------------------------------------
     def _frontier_offsets(self, nodes: np.ndarray
@@ -283,14 +387,17 @@ class HostIndex:
         per = lay.blocks_per_chunk * lay.block_bytes
         return nodes * per, np.zeros_like(nodes)
 
-    def search(self, q: np.ndarray, k: int, L: int, w: int = 4
+    def search(self, q: np.ndarray, k: int, L: int, w: int = 4, *,
+               prefetch: int = 0, adc_dtype: str = "f32"
                ) -> Tuple[np.ndarray, SearchStats]:
         """Vectorized beam search (single query). Bit-identical results to
         `search_ref`; all per-hop work batched (one preadv fetch, one ADC)."""
-        ids, stats = self.search_batch(q[None], k, L, w)
+        ids, stats = self.search_batch(q[None], k, L, w, prefetch=prefetch,
+                                       adc_dtype=adc_dtype)
         return ids[0], stats[0]
 
-    def search_batch(self, Q: np.ndarray, k: int, L: int, w: int = 4):
+    def search_batch(self, Q: np.ndarray, k: int, L: int, w: int = 4, *,
+                     prefetch: int = 0, adc_dtype: str = "f32"):
         """Batched vectorized beam search over all queries at once.
 
         All queries hop together (per-hop frontier interleaving): each hop
@@ -298,7 +405,17 @@ class HostIndex:
         cache fetch, parses all chunks as a single matrix, and ADCs all
         fresh neighbor codes of all queries as one (F, m) batch against the
         shared per-query LUT stack. Returns (ids (nq, k), [SearchStats]).
+
+        ``prefetch=p`` (p > 0) speculatively queues, per query and hop, the
+        blocks of its p closest fresh neighbors for background reading —
+        the likely next frontier — so they land while this hop's candidate
+        bookkeeping runs. Results are unaffected (the cache is exact);
+        only the blocking-syscall count drops. ``adc_dtype="int8"`` runs
+        neighbor ADC through the quantized host path (np_quantize_lut /
+        np_adc_int8 — the numpy twin of the device int8 kernel); exact
+        re-rank distances stay f32.
         """
+        assert adc_dtype in ("f32", "int8"), adc_dtype
         t0 = time.perf_counter()
         Q = np.asarray(Q, dtype=np.float32)
         nq = Q.shape[0]
@@ -308,6 +425,18 @@ class HostIndex:
         lut = np_build_lut_batch(self.centroids, Q, metric)   # (nq, m, ks)
         m = lut.shape[1]
         jj = np.arange(m)
+        if adc_dtype == "int8":
+            # same quantization as search_ref (np_host_lut_int8): the
+            # batch arithmetic below must match np_adc_int8 bit-for-bit
+            lut_q8, scale8 = np_host_lut_int8(lut)
+            lut_g = lut_q8                                    # int8 gather
+            dq = scale8 * np.float32(1 / 127)                 # (nq, m) f32
+        else:
+            lut_g, dq = lut, None
+        pf0 = None
+        if self.cache is not None:
+            c = self.cache.counters
+            pf0 = (c.prefetch_issued, c.prefetch_hits, c.prefetch_wasted)
         eps = np.asarray(self.meta["entry_points"], dtype=np.int64)
         n_ep = len(eps)
         # per-query counters (numpy-resident; folded into SearchStats at end)
@@ -324,7 +453,10 @@ class HostIndex:
         cand_d = np.full((nq, width), np.inf, np.float32)
         cand_exp = np.ones((nq, width), bool)
         cand_ids[:, :n_ep] = eps
-        cand_d[:, :n_ep] = lut[:, jj, self.ep_codes.astype(np.int64)].sum(-1)
+        ep_g = lut_g[:, jj, self.ep_codes.astype(np.int64)]   # (nq, n_ep, m)
+        cand_d[:, :n_ep] = (ep_g.astype(np.float32)
+                            * dq[:, None, :]).sum(-1) \
+            if dq is not None else ep_g.sum(-1)
         cand_exp[:, :n_ep] = False
         pq_a += n_ep
         order = np.argsort(cand_d, axis=1, kind="stable")[:, :L]
@@ -349,9 +481,11 @@ class HostIndex:
             nf = cand_ids[qf, cols]
             np.add.at(hops_a, np.unique(qf), 1)
             np.add.at(ios_a, qf, 1)
-            # 2. ONE batched fetch for every frontier chunk this hop
+            # 2. ONE batched fetch for every frontier chunk this hop; with
+            # prefetch on, miss runs tolerate `prefetch`-block holes and
+            # read them along (readahead into the cache)
             blk_off, inner = self._frontier_offsets(nf)
-            blocks, hit_mask, n_sys = self.cache.fetch(blk_off)
+            blocks, hit_mask, n_sys = self.cache.fetch(blk_off, gap=prefetch)
             # attribute unique-block hits/misses/bytes to the first query
             # that asked for each block (hit_mask is in first-appearance
             # order, matching sorted first-occurrence indices); syscalls to
@@ -403,20 +537,13 @@ class HostIndex:
                     .reshape(P * lay.R, lay.pq_m)[fresh]
             else:
                 codes = self.pq_codes[f_ids]
-            f_d = lut[f_q[:, None], jj[None, :],
-                      codes.astype(np.int64)].sum(-1).astype(np.float32)
+            f_g = lut_g[f_q[:, None], jj[None, :], codes.astype(np.int64)]
+            f_d = (f_g.astype(np.float32) * dq[f_q]).sum(-1) \
+                if dq is not None else f_g.sum(-1).astype(np.float32)
             np.add.at(pq_a, f_q, 1)
             np.bitwise_or.at(bits, (f_q, f_ids >> 6),
                              np.uint64(1) << (f_ids & 63).astype(np.uint64))
-            # 5. pool the exact distances of expanded nodes (re-rank pool)
-            frank = _group_rank(qf)
-            pcol_i = np.full((nq, w), -1, np.int64)
-            pcol_d = np.full((nq, w), np.inf, np.float32)
-            pcol_i[qf, frank] = nf
-            pcol_d[qf, frank] = exact
-            pool_ids_cols.append(pcol_i)
-            pool_d_cols.append(pcol_d)
-            # 6. insert fresh neighbors, re-sort, trim to L
+            # 5. insert fresh neighbors, re-sort, trim to L
             counts = np.bincount(f_q, minlength=nq)
             K = int(counts.max()) if counts.size else 0
             if K:
@@ -433,6 +560,28 @@ class HostIndex:
                 cand_ids = np.take_along_axis(all_ids, order, 1)
                 cand_d = np.take_along_axis(all_d, order, 1)
                 cand_exp = np.take_along_axis(all_exp, order, 1)
+            # 6. async next-hop prefetch (double-buffering): the candidate
+            # list the NEXT hop will select its frontier from is final
+            # here, so the top `prefetch` unexpanded candidates per query
+            # are its exact frontier (depth > w adds margin for later
+            # hops). Queue their blocks now — the background thread reads
+            # them while the pool bookkeeping below and the next hop's
+            # frontier selection run on this thread, turning next hop's
+            # blocking misses into prefetch hits. Results are unaffected.
+            if prefetch > 0:
+                psel = ~cand_exp & np.isfinite(cand_d)
+                pn = cand_ids[psel & (np.cumsum(psel, axis=1) <= prefetch)]
+                if pn.size:
+                    self.cache.prefetch_async(
+                        self._frontier_offsets(pn)[0])
+            # 7. pool the exact distances of expanded nodes (re-rank pool)
+            frank = _group_rank(qf)
+            pcol_i = np.full((nq, w), -1, np.int64)
+            pcol_d = np.full((nq, w), np.inf, np.float32)
+            pcol_i[qf, frank] = nf
+            pcol_d[qf, frank] = exact
+            pool_ids_cols.append(pcol_i)
+            pool_d_cols.append(pcol_d)
         # re-rank over every expanded node, in expansion order (stable ties)
         out = np.full((nq, k), -1, np.int64)
         if pool_ids_cols:
@@ -451,14 +600,21 @@ class HostIndex:
                 bytes_read=int(bytes_a[i]), pq_dists=int(pq_a[i]),
                 latency_s=wall / nq, syscalls=int(sys_a[i]),
                 cache_hits=int(hit_a[i]), cache_misses=int(miss_a[i])))
-        return out, stats
+        if pf0 is not None:
+            # whole-batch prefetch deltas, attributed to the lead query
+            c = self.cache.counters
+            stats[0].prefetch_issued = c.prefetch_issued - pf0[0]
+            stats[0].prefetch_hits = c.prefetch_hits - pf0[1]
+            stats[0].prefetch_wasted = c.prefetch_wasted - pf0[2]
+        return self._map_out(out), stats
 
-    def search_batch_ref(self, Q: np.ndarray, k: int, L: int, w: int = 4):
+    def search_batch_ref(self, Q: np.ndarray, k: int, L: int, w: int = 4, *,
+                         adc_dtype: str = "f32"):
         """Scalar reference loop (the seed implementation's search_batch)."""
         ids = np.zeros((Q.shape[0], k), dtype=np.int64)
         stats = []
         for i in range(Q.shape[0]):
-            ids[i], s = self.search_ref(Q[i], k, L, w)
+            ids[i], s = self.search_ref(Q[i], k, L, w, adc_dtype=adc_dtype)
             stats.append(s)
         return ids, stats
 

@@ -38,11 +38,16 @@ def make_device_search_fn(index, layout, *, metric: str = "l2", L: int = 48,
     return search
 
 
-def make_host_search_fn(host_index, *, L: int = 48, w: int = 4):
+def make_host_search_fn(host_index, *, L: int = 48, w: int = 4,
+                        prefetch: int = 0, adc_dtype: str = "f32"):
     """Wrap `HostIndex.search_batch` (the vectorized storage-backed path)
-    into the `(queries, k) -> ids` callable `ServingEngine` consumes."""
+    into the `(queries, k) -> ids` callable `ServingEngine` consumes.
+    `prefetch` enables speculative next-hop block reads off the demand
+    path; `adc_dtype="int8"` serves via the quantized host ADC twin."""
     def search(queries: np.ndarray, k: int) -> np.ndarray:
-        ids, _ = host_index.search_batch(queries, k, L=max(L, k), w=w)
+        ids, _ = host_index.search_batch(queries, k, L=max(L, k), w=w,
+                                         prefetch=prefetch,
+                                         adc_dtype=adc_dtype)
         return ids
 
     return search

@@ -1,0 +1,269 @@
+"""Direct BlockCache unit tests: eviction order, invalidate, clear,
+hit_rate edge cases, readahead (gap) coalescing, and the async prefetcher
+(previously only covered indirectly through test_search_hotpath)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.block_cache import BlockCache
+
+IO = 4096
+
+
+@pytest.fixture()
+def blockfile(tmp_path):
+    """A file of 64 distinct 4 KiB blocks + an open fd."""
+    data = np.arange(64, dtype=np.uint8).repeat(IO)
+    p = tmp_path / "blocks.bin"
+    p.write_bytes(data.tobytes())
+    fd = os.open(p, os.O_RDONLY)
+    yield fd
+    os.close(fd)
+
+
+def offs(*blocks):
+    return np.asarray(blocks, dtype=np.int64) * IO
+
+
+# ---------------------------------------------------------------------------
+# hit_rate / counters
+# ---------------------------------------------------------------------------
+
+
+def test_hit_rate_no_fetches_is_zero_not_nan(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=4 * IO)
+    assert cache.hit_rate() == 0.0           # no division error on empty
+
+
+def test_hit_rate_counts_only_demand_path(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    cache.prefetch_async(offs(0, 1))
+    cache.wait_prefetch()
+    assert cache.hit_rate() == 0.0           # prefetch is not a demand hit
+    _, hm, n_sys = cache.fetch(offs(0, 1))
+    assert hm.all() and n_sys == 0
+    assert cache.hit_rate() == 1.0
+    cache.stop()
+
+
+# ---------------------------------------------------------------------------
+# eviction order
+# ---------------------------------------------------------------------------
+
+
+def resident(cache):
+    with cache._cond:
+        return sorted(k // IO for k in cache._blocks)
+
+
+def test_eviction_is_lru_order(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=3 * IO)
+    cache.fetch(offs(0))
+    cache.fetch(offs(1))
+    cache.fetch(offs(2))
+    cache.fetch(offs(0))          # refresh 0: LRU order now 1, 2, 0
+    cache.fetch(offs(3))          # evicts 1 (least recently used)
+    assert cache.counters.evictions == 1
+    assert resident(cache) == [0, 2, 3]
+    cache.fetch(offs(1))          # evicts 2 (next LRU)
+    assert resident(cache) == [0, 1, 3]
+
+
+def test_eviction_budget_respected_under_oversized_fetch(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=2 * IO)
+    out, _, _ = cache.fetch(offs(*range(10)))
+    assert (out[:, 0] == np.arange(10)).all()   # data correct regardless
+    assert cache.used_bytes <= 2 * IO
+
+
+# ---------------------------------------------------------------------------
+# invalidate
+# ---------------------------------------------------------------------------
+
+
+def test_invalidate_exact_block(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    cache.fetch(offs(0, 1, 2))
+    cache.invalidate(IO, IO)                  # exactly block 1
+    _, hm, _ = cache.fetch(offs(0, 1, 2))
+    assert hm.tolist() == [True, False, True]
+
+
+def test_invalidate_range_straddling_block_boundary(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    cache.fetch(offs(0, 1, 2, 3))
+    # [IO - 10, IO + 90) touches blocks 0 AND 1
+    cache.invalidate(IO - 10, 100)
+    _, hm, _ = cache.fetch(offs(0, 1, 2, 3))
+    assert hm.tolist() == [False, False, True, True]
+
+
+def test_invalidate_multiblock_range_drops_partial_last_block(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    cache.fetch(offs(0, 1, 2, 3))
+    # [IO + 1, 3*IO + 1) touches blocks 1, 2 and (one byte of) 3
+    cache.invalidate(IO + 1, 2 * IO)
+    _, hm, _ = cache.fetch(offs(0, 1, 2, 3))
+    assert hm.tolist() == [True, False, False, False]
+
+
+def test_invalidate_zero_or_negative_bytes_is_noop(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    cache.fetch(offs(0, 1))
+    cache.invalidate(0, 0)
+    cache.invalidate(IO, -5)
+    _, hm, _ = cache.fetch(offs(0, 1))
+    assert hm.all()
+
+
+# ---------------------------------------------------------------------------
+# clear
+# ---------------------------------------------------------------------------
+
+
+def test_clear_empties_cache_but_keeps_counters(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    cache.fetch(offs(0, 1, 2))
+    before = cache.counters.misses
+    cache.clear()
+    assert cache.used_bytes == 0
+    assert cache.counters.misses == before    # history survives clear
+    _, hm, _ = cache.fetch(offs(0))
+    assert not hm.any()                       # truly gone
+
+
+def test_counters_reset(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    cache.fetch(offs(0, 1))
+    cache.counters.reset()
+    assert cache.counters.snapshot() == tuple(
+        0 for _ in cache.counters.snapshot())
+
+
+# ---------------------------------------------------------------------------
+# readahead (gap) coalescing
+# ---------------------------------------------------------------------------
+
+
+def test_gap_zero_keeps_exact_runs(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=32 * IO)
+    _, _, n_sys = cache.fetch(offs(0, 1, 5, 6, 7))
+    assert n_sys == 2                          # [0,1] and [5,6,7]
+
+
+def test_gap_coalesces_runs_and_lands_holes_as_prefetched(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=32 * IO)
+    out, _, n_sys = cache.fetch(offs(0, 1, 5, 6, 7), gap=3)
+    assert n_sys == 1                          # one preadv spans the hole
+    assert (out[:, 0] == np.array([0, 1, 5, 6, 7])).all()
+    c = cache.counters
+    assert c.prefetch_issued == 3              # holes 2, 3, 4 landed
+    assert c.bytes_read == 8 * IO              # honest: holes are counted
+    _, hm, n_sys2 = cache.fetch(offs(2, 3, 4))
+    assert hm.all() and n_sys2 == 0            # readahead served them
+    assert c.prefetch_hits == 3
+
+
+def test_gap_holes_skipped_under_zero_retention(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=0)
+    out, _, n_sys = cache.fetch(offs(0, 2), gap=1)
+    assert n_sys == 1 and (out[:, 0] == np.array([0, 2])).all()
+    c = cache.counters
+    # an unretainable hole is not speculation: no issued count, and the
+    # bookkeeping sets stay empty (no unbounded growth in serving loops)
+    assert c.prefetch_issued == 0
+    with cache._cond:
+        assert not cache._prefetched and not cache._inflight
+
+
+def test_gap_hole_cancels_inflight_prefetch_of_same_block(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=16 * IO)
+    with cache._cond:            # simulate a queued-but-unread prefetch
+        cache._inflight.add(1 * IO)
+    cache.fetch(offs(0, 2), gap=1)             # hole 1 lands via readahead
+    with cache._cond:            # the demand read covered it: cancelled
+        assert 1 * IO not in cache._inflight
+        assert 1 * IO in cache._blocks
+
+
+def test_gap_hole_eviction_counts_as_wasted(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=3 * IO)
+    cache.fetch(offs(0, 2), gap=1)             # hole 1 lands speculatively
+    cache.fetch(offs(8))
+    cache.fetch(offs(9))
+    cache.fetch(offs(10))                      # budget 3: hole 1 evicted
+    assert cache.counters.prefetch_wasted >= 1
+
+
+# ---------------------------------------------------------------------------
+# async prefetcher
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_lands_blocks_and_demand_hits(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    queued = cache.prefetch_async(offs(3, 4, 5))
+    assert queued == 3
+    cache.wait_prefetch()
+    c = cache.counters
+    assert c.prefetch_issued == 3 and c.prefetch_syscalls == 1
+    assert c.syscalls == 0                     # demand path untouched
+    out, hm, n_sys = cache.fetch(offs(3, 4, 5))
+    assert hm.all() and n_sys == 0
+    assert (out[:, 0] == np.array([3, 4, 5])).all()
+    assert c.prefetch_hits == 3
+    cache.stop()
+
+
+def test_prefetch_skips_resident_and_duplicate_offsets(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    cache.fetch(offs(0))
+    assert cache.prefetch_async(offs(0)) == 0          # already resident
+    assert cache.prefetch_async(offs(1, 1, 1)) == 1    # deduped
+    cache.wait_prefetch()
+    assert cache.counters.prefetch_issued == 1
+    cache.stop()
+
+
+def test_prefetch_zero_budget_noop(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=0)
+    assert cache.prefetch_async(offs(0, 1)) == 0
+    assert cache.counters.prefetch_issued == 0
+
+
+def test_demand_fetch_waits_for_inflight_instead_of_rereading(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=16 * IO)
+    cache.prefetch_async(offs(*range(10)))
+    out, hm, n_sys = cache.fetch(offs(*range(10)))     # may race the worker
+    cache.wait_prefetch()
+    assert (out[:, 0] == np.arange(10)).all()
+    c = cache.counters
+    # every block was read from storage, and at most twice: once is the
+    # design (demand waits on in-flight prefetches); twice only via the
+    # _PENDING_WAIT_S timeout fallback, which a descheduled worker on a
+    # loaded CI box can legitimately trigger
+    assert 10 * IO <= c.prefetch_bytes + c.bytes_read <= 20 * IO
+    assert hm.sum() == 10 - c.misses
+    cache.stop()
+
+
+def test_prefetch_unused_blocks_counted_wasted_on_clear(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    cache.prefetch_async(offs(6, 7))
+    cache.wait_prefetch()
+    cache.clear()
+    assert cache.counters.prefetch_wasted == 2
+    cache.stop()
+
+
+def test_invalidate_cancels_inflight_prefetch(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=8 * IO)
+    cache.prefetch_async(offs(5))
+    cache.invalidate(5 * IO, 1)               # may cancel before the read
+    cache.wait_prefetch()
+    # either it was cancelled mid-flight (never landed) or it landed and
+    # was dropped+counted; in NO case may stale block 5 sit resident
+    with cache._cond:
+        assert 5 * IO not in cache._blocks
+    cache.stop()

@@ -214,6 +214,117 @@ def test_serving_engine_device_int8_fn(small_corpus, built_graph,
 
 
 # ---------------------------------------------------------------------------
+# host int8 ADC (numpy twin of the device quantized path)
+# ---------------------------------------------------------------------------
+
+
+def test_np_quantize_lut_matches_device_recipe():
+    """The numpy twin and kernels.chunk_adc.quantize_lut must stay
+    numerically identical — one shared scale recipe (§Perf adc-int8)."""
+    import jax.numpy as jnp
+    from repro.core.index_io import np_quantize_lut
+    from repro.kernels.chunk_adc import quantize_lut
+    lut = np.random.default_rng(0).normal(
+        size=(3, 8, 16)).astype(np.float32) * 7.5
+    q_np, s_np = np_quantize_lut(lut)
+    q_dev, s_dev = quantize_lut(jnp.asarray(lut))
+    np.testing.assert_array_equal(q_np, np.asarray(q_dev))
+    np.testing.assert_allclose(s_np, np.asarray(s_dev), rtol=1e-6)
+
+
+def test_np_adc_int8_scalar_scale_matches_device_numerics():
+    """Scalar-scale np_adc_int8 == dequantize-then-sum (the ref-backend
+    emulation in kernels.ops) up to f32 summation order."""
+    from repro.core.index_io import np_adc_int8, np_quantize_lut
+    rng = np.random.default_rng(1)
+    lut = rng.normal(size=(6, 16)).astype(np.float32) * 3
+    codes = rng.integers(0, 16, size=(40, 6))
+    q8, scale = np_quantize_lut(lut)
+    got = np_adc_int8(q8, scale, codes)
+    deq = q8.astype(np.float32) * (scale / 127.0)
+    want = deq[np.arange(6), codes].sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_host_int8_batch_matches_int8_ref(index_dirs, small_corpus):
+    """The int8 hot path has its own scalar oracle: bit-identical ids."""
+    base, q, gt = small_corpus
+    for mode, path in index_dirs.items():
+        idx = HostIndex.load(path)
+        ids_b, _ = idx.search_batch(q, 10, L=40, adc_dtype="int8")
+        ids_r, _ = idx.search_batch_ref(q, 10, L=40, adc_dtype="int8")
+        np.testing.assert_array_equal(ids_b, ids_r)
+        idx.close()
+
+
+def test_host_int8_adc_recall_parity(index_dirs, small_corpus):
+    """Acceptance: host int8 recall within 0.01 of float32."""
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    r = {}
+    for adc in ("f32", "int8"):
+        ids, _ = idx.search_batch(q, 10, L=40, adc_dtype=adc)
+        r[adc] = recall_at(ids, gt, 10)
+    assert abs(r["f32"] - r["int8"]) <= 0.01
+    assert r["int8"] >= 0.8
+    idx.close()
+
+
+# ---------------------------------------------------------------------------
+# async next-hop prefetch on the host path
+# ---------------------------------------------------------------------------
+
+
+def test_search_with_prefetch_identical_results(index_dirs, small_corpus):
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    ids0, _ = idx.search_batch(q, 10, L=40)
+    for pf in (2, 4, 8):
+        idx.cache.wait_prefetch()
+        idx.cache.clear()
+        ids, stats = idx.search_batch(q, 10, L=40, prefetch=pf)
+        np.testing.assert_array_equal(ids0, ids)
+    idx.cache.wait_prefetch()
+    # prefetch counters surface in SearchStats (lead-query attribution)
+    c = idx.cache.counters
+    assert c.prefetch_issued > 0
+    assert c.prefetch_hits > 0
+    idx.close()
+
+
+def test_prefetch_moves_io_off_demand_path(index_dirs, small_corpus):
+    """With exact next-frontier prefetch, cold demand syscalls collapse
+    while total storage reads stay conserved (no duplicated I/O)."""
+    base, q, gt = small_corpus
+    idx0 = HostIndex.load(index_dirs["aisaq"])
+    _, s0 = idx0.search_batch(q, 10, L=40)
+    base_sys = sum(s.syscalls for s in s0)
+    base_bytes = idx0.cache.counters.bytes_read
+    idx0.close()
+    idx1 = HostIndex.load(index_dirs["aisaq"])
+    _, s1 = idx1.search_batch(q, 10, L=40, prefetch=4)
+    idx1.cache.wait_prefetch()
+    c = idx1.cache.counters
+    assert sum(s.syscalls for s in s1) < base_sys
+    # conserved I/O: demand + background ~ baseline demand (readahead
+    # holes may add a little; duplicates would roughly double it)
+    assert c.bytes_read + c.prefetch_bytes < 1.5 * base_bytes
+    idx1.close()
+
+
+def test_serving_host_fn_accepts_prefetch_and_adc(index_dirs, small_corpus):
+    from repro.serving.engine import make_host_search_fn
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    fn = make_host_search_fn(idx, L=40, prefetch=4, adc_dtype="int8")
+    ids = fn(q[:4], 10)
+    assert ids.shape == (4, 10)
+    ref, _ = idx.search_batch(q[:4], 10, L=40, adc_dtype="int8")
+    np.testing.assert_array_equal(ids, ref)
+    idx.close()
+
+
+# ---------------------------------------------------------------------------
 # vectorized helpers
 # ---------------------------------------------------------------------------
 
