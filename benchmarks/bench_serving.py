@@ -1,0 +1,340 @@
+"""Multi-tenant serving benchmark: warm-index pool sweep + exact rerank.
+
+Zipf multi-corpus section (the paper's §2.2/§4.4 RAG-retriever claim made
+measurable): N sub-corpora share one PQ-centroid set; a zipf-distributed
+request stream is served through `RetrievalService` at three pool budgets —
+
+  slots_1   budget fits ONE index   (the old single-active IndexManager)
+  slots_2   budget fits two indices (partial warmth)
+  all_warm  budget fits every index (AiSAQ's cheap-co-residency regime)
+
+Every config serves the IDENTICAL stream with the same per-index DRAM
+(block-cache budget + residency, well under the paper's ~10 MB knob);
+only the number of simultaneously-warm indices changes.  Reported per
+config: QPS, p50/p99, switch (pool-miss) count, eviction count, and a
+results-identical cross-check — eviction must never change answers.
+
+Rerank section: the exact rerank tier on the main bench corpus — recall@10
+for {PQ-only, rerank, traversal-pool} tiers, bit-identity vs the extended
+scalar oracle, and the rerank I/O cost.
+
+    PYTHONPATH=src:. python benchmarks/bench_serving.py          # full
+    PYTHONPATH=src:. python benchmarks/bench_serving.py --quick  # CI smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.index_io import HostIndex, recall_at
+from repro.serving.pool import WarmIndexPool
+from repro.serving.service import BackpressureError, RetrievalService
+
+SCHEMA_VERSION = 1
+N_CORPORA = 6
+N_REQUESTS = 600
+ZIPF_A = 1.1
+CACHE_BYTES = 1 << 20       # per-handle block-cache budget (<< 10 MB/index)
+K, L, W = 10, 32, 4
+RERANK = 40
+
+
+def zipf_stream(n_corpora: int, n_requests: int, seed: int = 7):
+    """Deterministic zipf corpus stream: P(rank r) ~ 1 / r^ZIPF_A."""
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, n_corpora + 1) ** ZIPF_A
+    p /= p.sum()
+    return rng.choice(n_corpora, size=n_requests, p=p)
+
+
+def _probe_sizes(paths):
+    """(per-entry bytes, shared-centroid bytes) from ONE probe load."""
+    pool = WarmIndexPool(paths, cache_bytes=CACHE_BYTES)
+    name = next(iter(paths))
+    pool.ensure(name)
+    per, cent = pool.entry_bytes(name), pool.centroid_bytes()
+    pool.close()
+    return per, cent
+
+
+def _budget(per: int, cent: int, n_slots: int) -> int:
+    """Byte budget fitting exactly n_slots handles + the shared centroids."""
+    return cent + n_slots * per + per // 2
+
+
+def _run_config(paths, budget, stream, queries_per_corpus) -> dict:
+    """Serve the full stream through one pool config; report telemetry.
+
+    Pools are `strict` (the byte budget is a hard admission resource) and
+    every config runs ONE worker: on this GIL-bound host path a second
+    search thread only adds contention noise, and the sweep is about the
+    POOL dimension — what changes across configs is purely how many
+    handles (and their block caches) stay warm.  An evicted corpus pays
+    load + cold-cache on its next batch; a warm one pays neither."""
+    pool = WarmIndexPool(paths, budget_bytes=budget, cache_bytes=CACHE_BYTES,
+                         strict=True)
+    svc = RetrievalService(pool, num_workers=1, max_batch=8, max_wait_ms=2.0,
+                           max_queue_depth=2 * len(stream), L=L, w=W)
+    names = sorted(paths)
+    q_next = {n: 0 for n in names}
+    t0 = time.perf_counter()
+    reqs = []
+    for c in stream:
+        name = names[c]
+        qs = queries_per_corpus[name]
+        reqs.append((name, svc.submit(qs[q_next[name] % len(qs)],
+                                      corpus=name, k=K)))
+        q_next[name] += 1
+    for _, r in reqs:
+        r.event.wait(120.0)
+        assert r.error is None and r.result is not None, r.error
+    wall = time.perf_counter() - t0
+    st = svc.stats()
+    ps = pool.stats()
+    out = dict(
+        budget_bytes=int(budget) if budget is not None else None,
+        wall_s=wall, qps=len(stream) / wall,
+        p50_ms=st["p50_ms"], p99_ms=st["p99_ms"],
+        switches=st["total_switches"],
+        pool=dict(hits=ps["hits"], misses=ps["misses"],
+                  evictions=ps["evictions"],
+                  budget_overflow=ps["budget_overflow"],
+                  centroid_shares=ps["centroid_shares"],
+                  strict_waits=ps["strict_waits"],
+                  used_bytes=ps["used_bytes"], open=ps["open"]),
+        per_corpus={c: dict(completed=v["completed"], switches=v["switches"],
+                            p99_ms=v.get("p99_ms"), qps=v["qps"])
+                    for c, v in st["corpora"].items()})
+    results = {i: np.asarray(r.result) for i, (_, r) in enumerate(reqs)}
+    svc.stop()
+    pool.close()
+    return out, results
+
+
+def bench_zipf_multicorpus() -> dict:
+    paths = C.ensure_subcorpora(n_sub=N_CORPORA)
+    base, _, _ = C.corpus()
+    sub_n = 2000
+    from repro.data.vectors import make_queries
+    queries_per_corpus = {
+        name: make_queries(32, base[i * sub_n:(i + 1) * sub_n], seed=10 + i)
+        for i, name in enumerate(sorted(paths))}
+    stream = zipf_stream(N_CORPORA, N_REQUESTS)
+    section = dict(n_corpora=N_CORPORA, n_requests=N_REQUESTS, zipf_a=ZIPF_A,
+                   cache_bytes_per_index=CACHE_BYTES, k=K, L=L, w=W,
+                   configs={})
+    # per-index DRAM: residency + cache budget, centroids counted once
+    per, cent = _probe_sizes(paths)
+    section["per_index_bytes"] = per
+    section["shared_centroid_bytes"] = cent
+    budgets = {"slots_1": _budget(per, cent, 1),
+               "slots_2": _budget(per, cent, 2),
+               "all_warm": _budget(per, cent, N_CORPORA)}
+    all_results = {}
+    for cfg, budget in budgets.items():
+        r, results = _run_config(paths, budget, stream, queries_per_corpus)
+        section["configs"][cfg] = r
+        all_results[cfg] = results
+        print(f"[bench_serving] {cfg:8s} qps={r['qps']:8.1f} "
+              f"p99={r['p99_ms']:7.2f}ms switches={r['switches']:4d} "
+              f"evictions={r['pool']['evictions']}")
+    # eviction must never change answers: identical ids across configs
+    ident = all(
+        np.array_equal(all_results["slots_1"][i], all_results["all_warm"][i])
+        and np.array_equal(all_results["slots_2"][i],
+                           all_results["all_warm"][i])
+        for i in range(N_REQUESTS))
+    s1, aw = section["configs"]["slots_1"], section["configs"]["all_warm"]
+    section["headline"] = dict(
+        p99_single_slot_ms=s1["p99_ms"], p99_all_warm_ms=aw["p99_ms"],
+        p99_speedup_x=s1["p99_ms"] / max(aw["p99_ms"], 1e-9),
+        qps_single_slot=s1["qps"], qps_all_warm=aw["qps"],
+        switches_single_slot=s1["switches"],
+        switches_all_warm=aw["switches"],
+        all_warm_p99_below_single_slot=bool(aw["p99_ms"] < s1["p99_ms"]),
+        results_identical_across_budgets=bool(ident))
+    return section
+
+
+def bench_rerank(m: int = C.DEFAULT_M) -> dict:
+    """Exact rerank tier vs PQ-only vs traversal pool on the bench corpus."""
+    paths = C.ensure_indices(ms=(m,), modes=("aisaq",))
+    base, q, gt = C.corpus()
+    idx = HostIndex.load(paths[("aisaq", m)])
+    out = dict(k=K, L=40, rerank_depth=RERANK, tiers={})
+    tier_ids = {}
+    for tier, rr in (("pq_only", 0), ("rerank", RERANK),
+                     ("traversal_pool", None)):
+        t0 = time.perf_counter()
+        ids, stats = idx.search_batch(q, K, L=40, rerank=rr)
+        wall = time.perf_counter() - t0
+        tier_ids[tier] = ids
+        out["tiers"][tier] = dict(
+            recall10=recall_at(ids, gt, K), wall_s=wall,
+            qps=len(q) / wall,
+            rerank_ios_per_query=float(np.mean([s.rerank_ios
+                                                for s in stats])))
+    ref_ids, _ = idx.search_batch_ref(q, K, L=40, rerank=RERANK)
+    out["identical_to_oracle"] = bool(
+        np.array_equal(tier_ids["rerank"], ref_ids))
+    out["recall_lift_vs_pq_only"] = \
+        out["tiers"]["rerank"]["recall10"] - out["tiers"]["pq_only"]["recall10"]
+    idx.close()
+    return out
+
+
+def all_benchmarks():
+    rows = []
+    report = {"schema_version": SCHEMA_VERSION,
+              "corpus": dict(n=C.N, dim=C.DIM, R=C.R)}
+    report["zipf_multicorpus"] = z = bench_zipf_multicorpus()
+    for cfg, r in z["configs"].items():
+        rows.append((f"serving_{cfg}_qps", r["qps"],
+                     f"p99={r['p99_ms']:.2f}ms_switches={r['switches']}"))
+    rows.append(("serving_p99_speedup_all_warm",
+                 z["headline"]["p99_speedup_x"],
+                 f"identical={z['headline']['results_identical_across_budgets']}"))
+    report["rerank"] = rr = bench_rerank()
+    for tier, t in rr["tiers"].items():
+        rows.append((f"rerank_{tier}_recall10", t["recall10"],
+                     f"qps={t['qps']:.0f}"))
+    rows.append(("rerank_recall_lift", rr["recall_lift_vs_pq_only"],
+                 f"oracle_identical={rr['identical_to_oracle']}"))
+    report["headline"] = dict(
+        all_warm_p99_below_single_slot=z["headline"]
+        ["all_warm_p99_below_single_slot"],
+        p99_speedup_x=z["headline"]["p99_speedup_x"],
+        rerank_recall10=rr["tiers"]["rerank"]["recall10"],
+        pq_only_recall10=rr["tiers"]["pq_only"]["recall10"],
+        rerank_identical_to_oracle=rr["identical_to_oracle"])
+    dest = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_serving.json")
+    with open(os.path.abspath(dest), "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"[bench_serving] wrote {os.path.abspath(dest)}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# CI smoke
+# ---------------------------------------------------------------------------
+
+
+def quick_smoke() -> int:
+    """CI smoke: tiny corpora built on the fly in a tempdir (the cached
+    `benchmarks/artifacts/bench_idx` indices are NOT rebuilt — CI has no
+    artifact cache and must stay fast).  Asserts the serving invariants:
+    pool eviction correctness, admission control, switch-count ordering,
+    and rerank tier bit-identity + recall dominance."""
+    import tempfile
+
+    import jax
+    from repro.core import pq
+    from repro.core.index_io import write_index
+    from repro.core.vamana import build_vamana
+    from repro.data.vectors import make_clustered, make_queries
+
+    t0 = time.perf_counter()
+    failures = []
+    n_sub, sub_n, d = 3, 800, 32
+    base = make_clustered(n_sub * sub_n, d, seed=0)
+    cb = pq.train_codebooks(jax.random.PRNGKey(0), base, m=8, iters=6)
+    cents, codes = np.asarray(cb.centroids), np.asarray(pq.encode(cb, base))
+    with tempfile.TemporaryDirectory() as td:
+        paths = {}
+        qpc = {}
+        for i in range(n_sub):
+            sl = slice(i * sub_n, (i + 1) * sub_n)
+            g = build_vamana(base[sl], R=12, L=24, seed=i)
+            p = os.path.join(td, f"sub{i}")
+            write_index(p, vectors=base[sl], graph=g, centroids=cents,
+                        codes=codes[sl], metric="l2", mode="aisaq")
+            paths[f"sub{i}"] = p
+            qpc[f"sub{i}"] = make_queries(8, base[sl], seed=20 + i)
+        refs = {}
+        for name, p in paths.items():
+            idx = HostIndex.load(p)
+            refs[name], _ = idx.search_batch(qpc[name], 5, L=24, w=W)
+            idx.close()
+        stream = zipf_stream(n_sub, 90)
+        switch_counts = {}
+        per, cent = _probe_sizes(paths)
+        for cfg, slots in (("slots_1", 1), ("all_warm", n_sub)):
+            pool = WarmIndexPool(paths, cache_bytes=CACHE_BYTES,
+                                 budget_bytes=_budget(per, cent, slots),
+                                 strict=True)
+            svc = RetrievalService(pool, num_workers=2, max_batch=8,
+                                   max_wait_ms=1.0, max_queue_depth=500,
+                                   L=24, w=W)
+            names = sorted(paths)
+            reqs = []
+            for i, c in enumerate(stream):
+                name = names[c]
+                reqs.append((name, i, svc.submit(qpc[name][i % 8],
+                                                 corpus=name, k=5)))
+            for name, i, r in reqs:
+                r.event.wait(30.0)
+                if r.result is None:
+                    failures.append(f"{cfg}: request {i} never completed "
+                                    f"({r.error})")
+                elif not np.array_equal(r.result, refs[name][i % 8]):
+                    failures.append(f"{cfg}: request {i} wrong ids "
+                                    "(eviction corrupted a search)")
+            st = svc.stats()
+            switch_counts[cfg] = st["total_switches"]
+            if cfg == "slots_1" and st["pool"]["evictions"] == 0:
+                failures.append("slots_1: no evictions — budget not binding")
+            svc.stop()
+            pool.close()
+        if not switch_counts["all_warm"] < switch_counts["slots_1"]:
+            failures.append(
+                f"all-warm switches ({switch_counts['all_warm']}) not below "
+                f"single-slot ({switch_counts['slots_1']})")
+        # admission control rejects when the queue is at depth
+        pool = WarmIndexPool(paths, cache_bytes=CACHE_BYTES)
+        svc = RetrievalService(
+            pool, num_workers=1, max_queue_depth=2, max_wait_ms=0.5,
+            search_fn=lambda idx, Q, k:
+            (time.sleep(0.15), np.zeros((Q.shape[0], k), np.int64))[1])
+        rejected = 0
+        for _ in range(10):
+            try:
+                svc.submit(qpc["sub0"][0], corpus="sub0", k=5)
+            except BackpressureError:
+                rejected += 1
+        if rejected == 0:
+            failures.append("admission control never rejected")
+        svc.stop()
+        pool.close()
+        # rerank tier: oracle bit-identity + recall dominance over PQ-only
+        idx = HostIndex.load(paths["sub0"])
+        qq = qpc["sub0"]
+        gt = np.asarray(pq.groundtruth(qq, base[:sub_n], 5))
+        ids_rr, _ = idx.search_batch(qq, 5, L=24, rerank=20)
+        ids_ref, _ = idx.search_batch_ref(qq, 5, L=24, rerank=20)
+        ids_pq, _ = idx.search_batch(qq, 5, L=24, rerank=0)
+        if not np.array_equal(ids_rr, ids_ref):
+            failures.append("rerank: batched != scalar oracle")
+        r_rr, r_pq = recall_at(ids_rr, gt, 5), recall_at(ids_pq, gt, 5)
+        if r_rr < r_pq:
+            failures.append(f"rerank recall {r_rr:.3f} < PQ-only {r_pq:.3f}")
+        idx.close()
+    wall = time.perf_counter() - t0
+    if failures:
+        for msg in failures:
+            print(f"[bench_serving --quick] FAIL: {msg}", file=sys.stderr)
+        return 1
+    print(f"[bench_serving --quick] all serving invariants hold ({wall:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--quick" in sys.argv[1:]:
+        sys.exit(quick_smoke())
+    for name, val, extra in all_benchmarks():
+        print(f"{name},{val:.3f},{extra}")

@@ -5,7 +5,8 @@ import sys
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=["paper", "device", "search"],
+    ap.add_argument("--only", choices=["paper", "device", "search",
+                                       "serving"],
                     default=None)
     args = ap.parse_args(argv)
     rows = []
@@ -18,6 +19,9 @@ def main(argv=None) -> None:
     if args.only in (None, "search"):
         from benchmarks.bench_search import all_benchmarks as search
         rows += search()
+    if args.only in (None, "serving"):
+        from benchmarks.bench_serving import all_benchmarks as serving
+        rows += serving()
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")

@@ -1,11 +1,15 @@
-"""RAG-style multi-corpus retrieval with millisecond index switching
-(paper §2.2 / Table 4) served through the batching engine with hedging.
+"""RAG-style multi-corpus retrieval (paper §2.2 / Table 4) served by the
+multi-tenant `RetrievalService`: a warm-index pool keeps every corpus open
+under one DRAM budget (shared PQ centroids charged once), per-corpus queues
+serve tenants concurrently, and the exact rerank tier rescores candidates
+with the full-precision vectors already sitting in the traversal chunks.
 
     PYTHONPATH=src python examples/rag_retrieval.py
 
 A simulated LLM chain issues retrievals against three different corpora
 (news / docs / code) that share one embedding space, so their AiSAQ indices
-share PQ centroids — switching costs only the entry-point metadata load.
+share PQ centroids — co-residency costs one centroid table + ~KBs per
+corpus.
 """
 import os
 import sys
@@ -20,9 +24,8 @@ import numpy as np
 from repro.configs.base import IndexConfig
 from repro.core import pq
 from repro.core.build import build_index
-from repro.core.index_switch import IndexManager
 from repro.data.vectors import make_clustered, make_queries
-from repro.serving.engine import ServingEngine
+from repro.serving import RetrievalService, WarmIndexPool
 
 
 def main():
@@ -42,29 +45,36 @@ def main():
         corpora[name] = p
         print(f"  built {name}")
 
-    mgr = IndexManager(corpora)
+    # budget generous enough for all three corpora: every index stays warm
+    pool = WarmIndexPool(corpora, budget_bytes=64 << 20,
+                         cache_bytes=2 << 20)
+    svc = RetrievalService(pool, num_workers=2, max_wait_ms=1.0, L=32,
+                           rerank=20)        # exact rerank tier on
 
-    def search(queries, k):
-        ids, _ = mgr.search_batch(queries, k, L=32)
-        return ids
-
-    eng = ServingEngine({c: search for c in corpora}, switch_fn=mgr.switch,
-                        max_wait_ms=1.0)
     print("\n== simulated RAG chain: 12 retrievals across corpora ==")
     chain = ["news", "docs", "docs", "code", "news", "code"] * 2
     queries = make_queries(len(chain), everything, seed=3)
     for step, corpus in enumerate(chain):
-        r = eng.submit_wait(queries[step], corpus=corpus, k=5)
+        r = svc.submit_wait(queries[step], corpus=corpus, k=5)
         print(f"  step {step:2d} [{corpus:4s}] top-5 ids {r.result.tolist()} "
               f"latency {r.latency_s*1e3:.2f} ms")
-    print(f"\nindex switches: {len(eng.switch_times)}; switch times (ms): "
-          f"{[f'{t*1e3:.2f}' for t in eng.switch_times]}")
-    print(f"serving percentiles: {eng.latency_percentiles()}")
-    print(f"resident bytes while serving 3 corpora: "
-          f"{mgr.resident_bytes()/1e3:.1f} KB (one corpus at a time — "
+
+    st = svc.stats()
+    ps = st["pool"]
+    print(f"\nper-corpus serving stats:")
+    for name, c in st["corpora"].items():
+        print(f"  {name:4s} completed={c['completed']} "
+              f"switches={c['switches']} p50={c.get('p50_ms', 0):.2f}ms")
+    print(f"pool: open={ps['open']}/{ps['registered']} warm, "
+          f"hits={ps['hits']} misses={ps['misses']} "
+          f"evictions={ps['evictions']}")
+    print(f"shared-centroid dedup: {ps['centroid_shares']} corpora reuse "
+          f"one {ps['centroid_bytes']/1e3:.1f} KB table")
+    print(f"DRAM for ALL {ps['open']} warm corpora: "
+          f"{ps['used_bytes']/1e6:.2f} MB (vs one-at-a-time switching — "
           "that's the point)")
-    eng.stop()
-    mgr.close()
+    svc.stop()
+    pool.close()
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + a hot-path benchmark smoke run.
+# CI entry point: tier-1 tests + hot-path and serving benchmark smoke runs.
 #
-# The smoke invocation rebuilds a tiny corpus from scratch and asserts the
-# search hot-path invariants (batched == scalar reference across
-# {relabel} x {prefetch} x {adc_dtype}, int8 recall parity), so a hot-path
-# regression fails CI loudly even when no unit test covers the exact
-# combination that broke.
+# The smoke invocations build tiny corpora from scratch in tempdirs and
+# assert the invariants loudly (batched == scalar reference across
+# {relabel} x {prefetch} x {adc_dtype} x {rerank}, int8 recall parity,
+# pool eviction correctness, admission control, rerank recall dominance).
+# They deliberately do NOT touch benchmarks/artifacts/bench_idx — CI has
+# no artifact cache and must never pay the 20k-corpus index build; the
+# cached artifacts are only for full local bench runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,3 +15,6 @@ bash scripts/tier1.sh
 
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_search.py --quick
+
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_serving.py --quick

@@ -197,6 +197,7 @@ class SearchStats:
     prefetch_issued: int = 0    # blocks landed by the background thread
     prefetch_hits: int = 0      # prefetched blocks a demand fetch consumed
     prefetch_wasted: int = 0    # prefetched blocks dropped unused
+    rerank_ios: int = 0     # chunk reads issued by the exact rerank tier
 
 
 class HostIndex:
@@ -305,12 +306,15 @@ class HostIndex:
 
     # -- Algorithm 1 (faithful scalar reference) -----------------------------
     def search_ref(self, q: np.ndarray, k: int, L: int, w: int = 4, *,
-                   adc_dtype: str = "f32"
+                   adc_dtype: str = "f32", rerank: Optional[int] = None
                    ) -> Tuple[np.ndarray, SearchStats]:
         """Scalar DiskANN beam search (paper Algorithm 1), one pread per
         node expansion. Kept as the semantics oracle for the vectorized
         hot path — `search` must return bit-identical ids (per adc_dtype:
-        the int8 oracle pins the int8 hot path)."""
+        the int8 oracle pins the int8 hot path).
+
+        ``rerank`` selects the result tier (see `search_batch`): None is
+        the traversal pool, 0 is PQ-only, r > 0 the exact rerank tier."""
         assert adc_dtype in ("f32", "int8"), adc_dtype
         t0 = time.perf_counter()
         q = np.asarray(q, dtype=np.float32)   # same arithmetic as `search`
@@ -369,12 +373,41 @@ class HostIndex:
             if new_ids:
                 cand_ids = np.concatenate([cand_ids] + new_ids)
                 cand_d = np.concatenate([cand_d] + new_d)
-        # re-rank by full-precision distances collected along the path
-        vids = np.array(list(expanded.keys()), dtype=np.int64)
-        vd = np.array(list(expanded.values()), dtype=np.float32)
-        topk = vids[np.argsort(vd, kind="stable")[:k]]
+        if rerank is None:
+            # re-rank by full-precision distances collected along the path
+            vids = np.array(list(expanded.keys()), dtype=np.int64)
+            vd = np.array(list(expanded.values()), dtype=np.float32)
+            topk = vids[np.argsort(vd, kind="stable")[:k]]
+        else:
+            topk = self._rerank_tail_ref(q, k, rerank, cand_ids, expanded,
+                                         stats)
         stats.latency_s = time.perf_counter() - t0
         return self._map_out(topk), stats
+
+    def _rerank_tail_ref(self, q: np.ndarray, k: int, rerank: int,
+                         cand_ids: np.ndarray, expanded: Dict[int, float],
+                         stats: SearchStats) -> np.ndarray:
+        """Scalar oracle of the exact rerank tier: rescore the final
+        (PQ-sorted) candidate list with full-precision vectors. Expanded
+        candidates reuse the exact distance computed during traversal;
+        unexpanded ones cost one chunk read each (accounted as
+        ``rerank_ios``). ``rerank == 0`` returns the PQ-only ranking."""
+        limit = max(int(rerank), k) if rerank else k
+        sel = cand_ids[:limit]
+        if not rerank:                   # PQ-only tier: no rescoring
+            return sel[:k].copy()
+        metric = self.meta["metric"]
+        d = np.empty(sel.size, np.float32)
+        for j, p in enumerate(int(x) for x in sel):
+            if p in expanded:
+                d[j] = expanded[p]
+                continue
+            raw = self._read_chunk(p, stats)
+            stats.rerank_ios += 1
+            vec, _, _ = parse_chunk(raw, self.layout)
+            vf = vec.astype(np.float32)
+            d[j] = -(vf @ q) if metric == "mips" else ((vf - q) ** 2).sum()
+        return sel[np.argsort(d, kind="stable")[:k]]
 
     # -- vectorized hot path -------------------------------------------------
     def _frontier_offsets(self, nodes: np.ndarray
@@ -388,16 +421,18 @@ class HostIndex:
         return nodes * per, np.zeros_like(nodes)
 
     def search(self, q: np.ndarray, k: int, L: int, w: int = 4, *,
-               prefetch: int = 0, adc_dtype: str = "f32"
+               prefetch: int = 0, adc_dtype: str = "f32",
+               rerank: Optional[int] = None
                ) -> Tuple[np.ndarray, SearchStats]:
         """Vectorized beam search (single query). Bit-identical results to
         `search_ref`; all per-hop work batched (one preadv fetch, one ADC)."""
         ids, stats = self.search_batch(q[None], k, L, w, prefetch=prefetch,
-                                       adc_dtype=adc_dtype)
+                                       adc_dtype=adc_dtype, rerank=rerank)
         return ids[0], stats[0]
 
     def search_batch(self, Q: np.ndarray, k: int, L: int, w: int = 4, *,
-                     prefetch: int = 0, adc_dtype: str = "f32"):
+                     prefetch: int = 0, adc_dtype: str = "f32",
+                     rerank: Optional[int] = None):
         """Batched vectorized beam search over all queries at once.
 
         All queries hop together (per-hop frontier interleaving): each hop
@@ -414,6 +449,21 @@ class HostIndex:
         neighbor ADC through the quantized host path (np_quantize_lut /
         np_adc_int8 — the numpy twin of the device int8 kernel); exact
         re-rank distances stay f32.
+
+        ``rerank`` selects the result tier, bit-identical to `search_ref`:
+          * None (default) — top-k by the exact distances of nodes expanded
+            during traversal (the historical behavior),
+          * 0 — PQ-only: top-k of the final candidate list ranked by ADC
+            distance alone (no full-precision rescoring — the DiskANN
+            no-rerank baseline),
+          * r > 0 — the exact rerank tier: the top-max(r, k) candidates of
+            the final PQ-sorted list are rescored with full-precision
+            vectors. Expanded candidates reuse the distance their chunk
+            already yielded; unexpanded ones are fetched through the block
+            cache in one batched read (``rerank_ios`` in SearchStats).
+            The candidate list holds at most L entries, so the effective
+            depth is min(r, L) — pass L >= r for the full depth (the
+            serving-tier factories do this automatically).
         """
         assert adc_dtype in ("f32", "int8"), adc_dtype
         t0 = time.perf_counter()
@@ -447,6 +497,7 @@ class HostIndex:
         sys_a = np.zeros(nq, np.int64)
         hit_a = np.zeros(nq, np.int64)
         miss_a = np.zeros(nq, np.int64)
+        rr_a = np.zeros(nq, np.int64)
         # candidate lists (sorted by PQ distance, stable; inf-padded to L)
         width = max(L, n_ep)
         cand_ids = np.full((nq, width), -1, np.int64)
@@ -582,9 +633,80 @@ class HostIndex:
             pcol_d[qf, frank] = exact
             pool_ids_cols.append(pcol_i)
             pool_d_cols.append(pcol_d)
-        # re-rank over every expanded node, in expansion order (stable ties)
         out = np.full((nq, k), -1, np.int64)
-        if pool_ids_cols:
+        if rerank is not None:
+            # -- exact rerank tier over the FINAL candidate list ------------
+            # (the scalar twin is _rerank_tail_ref; both must stay
+            # bit-identical). The final list is PQ-sorted with inf padding.
+            r_eff = max(int(rerank), k) if rerank else 0
+            exp_map: List[Dict[int, float]] = [{} for _ in range(nq)]
+            if r_eff and pool_ids_cols:
+                pool_ids = np.concatenate(pool_ids_cols, axis=1)
+                pool_d = np.concatenate(pool_d_cols, axis=1)
+                for i in range(nq):
+                    vmask = pool_ids[i] >= 0
+                    exp_map[i] = dict(zip(pool_ids[i][vmask].tolist(),
+                                          pool_d[i][vmask].tolist()))
+            sel_ids: List[np.ndarray] = []
+            sel_d: List[Optional[np.ndarray]] = []
+            need_pairs: List[Tuple[int, int]] = []
+            need_nodes: List[int] = []
+            for i in range(nq):
+                vmask = (cand_ids[i] >= 0) & np.isfinite(cand_d[i])
+                sel = cand_ids[i][vmask][:max(r_eff, k)]
+                sel_ids.append(sel)
+                if not r_eff:            # PQ-only tier: keep ADC ranking
+                    sel_d.append(None)
+                    continue
+                d = np.full(sel.size, np.inf, np.float32)
+                for j, p in enumerate(sel.tolist()):
+                    e = exp_map[i].get(p)
+                    if e is None:
+                        need_pairs.append((i, j))
+                        need_nodes.append(p)
+                    else:
+                        d[j] = e
+                sel_d.append(d)
+            if need_nodes:
+                # one batched cache fetch for every unexpanded candidate
+                nodes = np.asarray(need_nodes, dtype=np.int64)
+                nqi = np.asarray([pr[0] for pr in need_pairs], dtype=np.int64)
+                blk_off, inner = self._frontier_offsets(nodes)
+                blocks, hit_mask, n_sys = self.cache.fetch(blk_off)
+                uq = nqi[np.sort(np.unique(blk_off, return_index=True)[1])]
+                np.add.at(hit_a, uq[hit_mask], 1)
+                np.add.at(miss_a, uq[~hit_mask], 1)
+                np.add.at(bytes_a, uq[~hit_mask], lay.io_bytes)
+                sys_a[nqi[0]] += n_sys
+                np.add.at(ios_a, nqi, 1)
+                np.add.at(rr_a, nqi, 1)
+                P2 = nodes.size
+                chunk = np.empty((P2, lay.chunk_bytes), np.uint8)
+                for s in np.unique(inner):
+                    rows = inner == s
+                    chunk[rows] = blocks[rows, s:s + lay.chunk_bytes]
+                if lay.data_dtype == "uint8":
+                    vf = chunk[:, :lay.b_full].astype(np.float32)
+                else:
+                    vf = np.ascontiguousarray(chunk[:, :lay.b_full]) \
+                        .view(np.float32).reshape(P2, -1)
+                qv = Q[nqi]
+                if metric == "mips":
+                    ex = -np.einsum("pd,pd->p", vf, qv)
+                else:
+                    ex = ((vf - qv) ** 2).sum(axis=1)
+                for (i, j), e in zip(need_pairs, ex):
+                    sel_d[i][j] = e
+            for i in range(nq):
+                if r_eff:
+                    top = sel_ids[i][
+                        np.argsort(sel_d[i], kind="stable")[:k]]
+                else:
+                    top = sel_ids[i][:k]
+                out[i, :top.size] = top
+        elif pool_ids_cols:
+            # re-rank over every expanded node, in expansion order
+            # (stable ties) — the traversal-pool tier
             pool_ids = np.concatenate(pool_ids_cols, axis=1)
             pool_d = np.concatenate(pool_d_cols, axis=1)
             for i in range(nq):
@@ -599,7 +721,8 @@ class HostIndex:
                 hops=int(hops_a[i]), ios=int(ios_a[i]),
                 bytes_read=int(bytes_a[i]), pq_dists=int(pq_a[i]),
                 latency_s=wall / nq, syscalls=int(sys_a[i]),
-                cache_hits=int(hit_a[i]), cache_misses=int(miss_a[i])))
+                cache_hits=int(hit_a[i]), cache_misses=int(miss_a[i]),
+                rerank_ios=int(rr_a[i])))
         if pf0 is not None:
             # whole-batch prefetch deltas, attributed to the lead query
             c = self.cache.counters
@@ -609,12 +732,14 @@ class HostIndex:
         return self._map_out(out), stats
 
     def search_batch_ref(self, Q: np.ndarray, k: int, L: int, w: int = 4, *,
-                         adc_dtype: str = "f32"):
+                         adc_dtype: str = "f32",
+                         rerank: Optional[int] = None):
         """Scalar reference loop (the seed implementation's search_batch)."""
         ids = np.zeros((Q.shape[0], k), dtype=np.int64)
         stats = []
         for i in range(Q.shape[0]):
-            ids[i], s = self.search_ref(Q[i], k, L, w, adc_dtype=adc_dtype)
+            ids[i], s = self.search_ref(Q[i], k, L, w, adc_dtype=adc_dtype,
+                                        rerank=rerank)
             stats.append(s)
         return ids, stats
 

@@ -3,13 +3,18 @@
 The RAG scenario: one retriever process serves requests that may target any
 of several corpora. DiskANN must reload N-proportional PQ tables per switch;
 AiSAQ reloads only entry-point codes (+ centroids unless shared).
+
+Since the multi-tenant serving PR this is a thin compat wrapper over a
+budget-for-one `serving.pool.WarmIndexPool` (`max_open=1`): the pool owns
+the open handle, the shared-centroid dedup and the eviction of the
+previous corpus.  New code should use `WarmIndexPool` / `RetrievalService`
+directly — they hold MANY corpora warm and serve them concurrently.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, Optional
 
-import numpy as np
+import numpy as np  # noqa: F401  (kept: public module surface since seed)
 
 from repro.core.index_io import HostIndex
 
@@ -18,12 +23,25 @@ class IndexManager:
     """Holds one active HostIndex; switches between registered corpora."""
 
     def __init__(self, paths: Dict[str, str], mode: Optional[str] = None):
-        self.paths = dict(paths)
+        from repro.serving.pool import WarmIndexPool
+        self.pool = WarmIndexPool(paths, max_open=1, mode=mode)
         self.mode = mode
         self.active_name: Optional[str] = None
-        self.active: Optional[HostIndex] = None
-        self._centroids_hash: Optional[int] = None
-        self._centroids: Optional[np.ndarray] = None
+
+    @property
+    def paths(self) -> Dict[str, str]:
+        return self.pool.paths
+
+    @property
+    def active(self) -> Optional[HostIndex]:
+        if self.active_name is None:
+            return None
+        return self.pool.peek(self.active_name)
+
+    @property
+    def _centroids(self) -> Optional[np.ndarray]:
+        idx = self.active
+        return None if idx is None else idx.centroids
 
     def switch(self, name: str, share_centroids: bool = True) -> float:
         """Activate corpus `name`. Returns switch wall-time in seconds.
@@ -31,28 +49,13 @@ class IndexManager:
         If the target index was built with the same PQ centroids as the
         currently-loaded ones (hash match in meta.json) and
         `share_centroids`, skip the centroid load — paper Table 4's 0.3 ms
-        row, where only ~4 KiB of metadata moves.
+        row, where only ~4 KiB of metadata moves.  Raises a `KeyError`
+        naming the known corpora when `name` was never registered.
         """
         if name == self.active_name:
             return 0.0
-        path = self.paths[name]
-        t0 = time.perf_counter()
-        shared = None
-        if share_centroids and self._centroids is not None:
-            import json, os
-            with open(os.path.join(path, "meta.json")) as f:
-                meta_peek = json.load(f)
-            if meta_peek.get("centroids_hash") == self._centroids_hash:
-                shared = self._centroids
-        old = self.active
-        self.active = HostIndex.load(path, mode=self.mode,
-                                     shared_centroids=shared)
+        dt = self.pool.ensure(name, share_centroids=share_centroids)
         self.active_name = name
-        self._centroids = self.active.centroids
-        self._centroids_hash = self.active.meta.get("centroids_hash")
-        dt = time.perf_counter() - t0
-        if old is not None:
-            old.close()
         return dt
 
     def search(self, q, k: int, L: int, w: int = 4):
@@ -64,9 +67,9 @@ class IndexManager:
         return self.active.search_batch(Q, k, L, w)
 
     def resident_bytes(self) -> int:
-        return 0 if self.active is None else self.active.resident_bytes()
+        idx = self.active
+        return 0 if idx is None else idx.resident_bytes()
 
     def close(self):
-        if self.active is not None:
-            self.active.close()
-            self.active = None
+        self.pool.close()
+        self.active_name = None

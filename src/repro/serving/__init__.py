@@ -1,0 +1,17 @@
+"""Serving layer: batching engine, warm-index pool, multi-tenant service.
+
+  engine   — `ServingEngine` (single-loop batching + hedging) and the
+             `make_host_search_fn` / `make_device_search_fn` factories
+  pool     — `WarmIndexPool`, the byte-budgeted LRU of open HostIndex
+             handles with shared-centroid dedup and pin/unpin
+  service  — `RetrievalService`, per-corpus queues + concurrent workers +
+             admission control over a pool
+"""
+from repro.serving.engine import (Request, ServingEngine,
+                                  make_device_search_fn, make_host_search_fn)
+from repro.serving.pool import WarmIndexPool
+from repro.serving.service import BackpressureError, RetrievalService
+
+__all__ = ["Request", "ServingEngine", "make_device_search_fn",
+           "make_host_search_fn", "WarmIndexPool", "BackpressureError",
+           "RetrievalService"]

@@ -3,14 +3,20 @@
 The paper's serving story (RAG retriever): requests arrive for possibly
 different corpora; the engine batches per-corpus, switches indices (AiSAQ
 makes that ms-order), and runs the search backend. `hedge=2` issues each
-batch to two replicas and takes the first completion — the classic
-tail-latency-at-scale mitigation for the multi-server tier.
+batch to two replicas and takes the first SUCCESSFUL completion — the
+classic tail-latency-at-scale mitigation for the multi-server tier; work
+the losing replicas still performed is accounted in `hedge_stats`.
+
+This engine serializes every corpus through one loop thread; the
+multi-tenant layer that serves corpora concurrently from a warm-index
+pool is `serving.service.RetrievalService` + `serving.pool.WarmIndexPool`.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -20,34 +26,81 @@ import numpy as np
 
 def make_device_search_fn(index, layout, *, metric: str = "l2", L: int = 48,
                           w: int = 4, max_hops: int = 128,
-                          backend: str = "auto", adc_dtype: str = "f32"):
+                          backend: str = "auto", adc_dtype: str = "f32",
+                          rerank: int = 0):
     """Wrap the device beam search into the `(queries, k) -> ids` callable
     `ServingEngine` consumes. `adc_dtype="int8"` serves via the int8
     fused-hop ADC kernel (2x MXU rate) — the public serving entry point for
-    the quantized hot path."""
+    the quantized hot path.
+
+    `rerank=r` (r > 0) adds the exact rerank tier: beam search returns its
+    top-max(r, k) pool, their full-precision vectors are gathered from the
+    HBM chunk table, and `kernels.rerank` (tiled Pallas matmul-with-epilogue
+    on TPU, jnp ref elsewhere) rescores them exactly before the final
+    top-k."""
+    import jax
     import jax.numpy as jnp
     from repro.core.device_index import beam_search_device
+    from repro.kernels import ops
+
+    def _gather_vecs(ids: "jax.Array") -> "jax.Array":
+        """Candidate full-precision vectors, bitcast out of the packed HBM
+        chunk rows ON DEMAND — only (nq*r) rows per call ever materialize,
+        never an (N, d) resident copy of the corpus."""
+        rows = index.chunk_words[ids.reshape(-1)]     # (nq*r, stride/4) i32
+        by = jax.lax.bitcast_convert_type(
+            rows, jnp.uint8).reshape(rows.shape[0], -1)
+        vb = by[:, :layout.b_full]
+        if layout.data_dtype == "uint8":
+            return vb.astype(jnp.float32)
+        return jax.lax.bitcast_convert_type(
+            vb.reshape(rows.shape[0], layout.dim, 4), jnp.float32)
 
     def search(queries: np.ndarray, k: int) -> np.ndarray:
+        qj = jnp.asarray(queries)
+        if not rerank:
+            ids, _, _ = beam_search_device(
+                index, qj, k=k, L=max(L, k), w=w, max_hops=max_hops,
+                layout=layout, metric=metric, backend=backend,
+                adc_dtype=adc_dtype)
+            return np.asarray(ids)
+        r = max(int(rerank), k)
         ids, _, _ = beam_search_device(
-            index, jnp.asarray(queries), k=k, L=max(L, k), w=w,
-            max_hops=max_hops, layout=layout, metric=metric,
-            backend=backend, adc_dtype=adc_dtype)
-        return np.asarray(ids)
+            index, qj, k=r, L=max(L, r), w=w, max_hops=max_hops,
+            layout=layout, metric=metric, backend=backend,
+            adc_dtype=adc_dtype)
+        nq = ids.shape[0]
+        qf = qj.astype(jnp.float32)
+        cand = _gather_vecs(jnp.clip(ids, 0, index.n - 1)) \
+            .reshape(nq, r, -1)
+        # one kernel call per query (identical shapes -> one compile): the
+        # candidate sets are per-query, so a single (nq, nq*r) call would
+        # compute nq-times redundant distances
+        d = jnp.stack([ops.rerank(qf[i], cand[i], metric=metric,
+                                  backend=backend)
+                       for i in range(nq)])                     # (nq, r)
+        d = jnp.where(ids >= 0, d, jnp.inf)
+        top = jnp.argsort(d, axis=1)[:, :k]
+        return np.asarray(jnp.take_along_axis(ids, top, axis=1))
 
     return search
 
 
 def make_host_search_fn(host_index, *, L: int = 48, w: int = 4,
-                        prefetch: int = 0, adc_dtype: str = "f32"):
+                        prefetch: int = 0, adc_dtype: str = "f32",
+                        rerank: Optional[int] = None):
     """Wrap `HostIndex.search_batch` (the vectorized storage-backed path)
     into the `(queries, k) -> ids` callable `ServingEngine` consumes.
     `prefetch` enables speculative next-hop block reads off the demand
-    path; `adc_dtype="int8"` serves via the quantized host ADC twin."""
+    path; `adc_dtype="int8"` serves via the quantized host ADC twin;
+    `rerank` selects the result tier (None = traversal pool, 0 = PQ-only,
+    r > 0 = exact rerank of the top-r candidates — the beam width is
+    widened to r so the full depth exists, matching the device tier)."""
     def search(queries: np.ndarray, k: int) -> np.ndarray:
-        ids, _ = host_index.search_batch(queries, k, L=max(L, k), w=w,
+        ids, _ = host_index.search_batch(queries, k,
+                                         L=max(L, k, rerank or 0), w=w,
                                          prefetch=prefetch,
-                                         adc_dtype=adc_dtype)
+                                         adc_dtype=adc_dtype, rerank=rerank)
         return ids
 
     return search
@@ -62,6 +115,7 @@ class Request:
     result: Optional[np.ndarray] = None
     t_done: float = 0.0
     event: threading.Event = field(default_factory=threading.Event)
+    error: Optional[Exception] = None    # set instead of result on failure
 
     @property
     def latency_s(self) -> float:
@@ -86,8 +140,16 @@ class ServingEngine:
         self.replicas = replicas
         self.switch_fn = switch_fn
         self.q: "queue.Queue[Request]" = queue.Queue()
+        self._held: "deque[Request]" = deque()   # other-corpus holdover
         self.metrics: List[float] = []
         self.switch_times: List[float] = []
+        # hedge accounting: wasted = replicas that ran but lost the race,
+        # failed = replicas that raised (the winner is the first SUCCESS)
+        self.hedge_stats: Dict[str, int] = dict(batches=0, wasted=0, failed=0)
+        self._hedge_lock = threading.Lock()
+        # guards the _stop flag vs stop()'s queue drain: a submit racing a
+        # concurrent stop() must either raise or have its request drained
+        self._submit_lock = threading.Lock()
         self._active_corpus: Optional[str] = None
         self._stop = False
         self._pool = ThreadPoolExecutor(max_workers=max(2, hedge * 2))
@@ -97,9 +159,12 @@ class ServingEngine:
     # -- client API ----------------------------------------------------------
     def submit(self, query: np.ndarray, corpus: str = "default", k: int = 10
                ) -> Request:
-        r = Request(query=query, corpus=corpus, k=k)
-        self.q.put(r)
-        return r
+        with self._submit_lock:
+            if self._stop:
+                raise RuntimeError("engine stopped")
+            r = Request(query=query, corpus=corpus, k=k)
+            self.q.put(r)
+            return r
 
     def submit_wait(self, query, corpus="default", k=10, timeout=30.0):
         r = self.submit(query, corpus, k)
@@ -108,11 +173,30 @@ class ServingEngine:
 
     # -- engine loop ----------------------------------------------------------
     def _collect_batch(self) -> List[Request]:
-        try:
-            first = self.q.get(timeout=0.1)
-        except queue.Empty:
-            return []
+        """Corpus-pure batch with FIFO-preserving holdover: a request for a
+        DIFFERENT corpus encountered while collecting is parked in `_held`
+        (never re-queued to the back of the FIFO, which would reorder it
+        behind later arrivals and starve it under sustained foreign load);
+        the next batch starts from the holdover before touching the
+        queue."""
+        if self._held:
+            first = self._held.popleft()
+        else:
+            try:
+                first = self.q.get(timeout=0.1)
+            except queue.Empty:
+                return []
         batch = [first]
+        # same-corpus requests already held keep their relative order
+        for r in list(self._held):
+            if len(batch) >= self.max_batch:
+                break
+            if r.corpus == first.corpus:
+                try:
+                    self._held.remove(r)
+                except ValueError:
+                    continue             # a concurrent stop() drained it
+                batch.append(r)
         deadline = time.perf_counter() + self.max_wait
         while len(batch) < self.max_batch:
             left = deadline - time.perf_counter()
@@ -123,41 +207,123 @@ class ServingEngine:
             except queue.Empty:
                 break
             if r.corpus != first.corpus:      # keep batches corpus-pure
-                self.q.put(r)
-                break
+                self._held.append(r)          # served at the NEXT batch head
+                continue
             batch.append(r)
         return batch
 
     def _run_search(self, fn, queries, k):
         return fn(queries, k)
 
+    def _count_hedge_loser(self, fut):
+        """done-callback for replicas that lost the race: work that ran to
+        completion for nothing is wasted; cancelled-before-running is
+        free."""
+        with self._hedge_lock:
+            if fut.cancelled():
+                return
+            if fut.exception() is not None:
+                self.hedge_stats["failed"] += 1
+            else:
+                self.hedge_stats["wasted"] += 1
+
+    def _run_hedged(self, queries, k):
+        """First SUCCESSFUL replica wins. `Future.cancel()` cannot stop an
+        already-running thread, so losing replicas are accounted (wasted /
+        failed) via done-callbacks rather than assumed dead."""
+        futs = [self._pool.submit(self._run_search, rep, queries, k)
+                for rep in self.replicas[:self.hedge]]
+        with self._hedge_lock:
+            self.hedge_stats["batches"] += 1
+        pending = set(futs)
+        ids = err = None
+        while pending:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            for f in done:
+                e = f.exception()
+                if e is None and ids is None:
+                    ids = f.result()
+                else:
+                    with self._hedge_lock:
+                        if e is not None:
+                            self.hedge_stats["failed"] += 1
+                        else:
+                            self.hedge_stats["wasted"] += 1
+                    err = e if e is not None else err
+            if ids is not None:
+                break
+        for p in pending:                 # losers still in flight
+            p.cancel()
+            p.add_done_callback(self._count_hedge_loser)
+        if ids is None:                   # every replica failed
+            raise err if err is not None else RuntimeError("hedge failed")
+        return ids
+
     def _loop(self):
+        try:
+            self._loop_inner()
+        finally:
+            # the loop thread drains its own leftovers on exit: requests
+            # it moved into _held after stop()'s drain ran would hang
+            self._drain(RuntimeError("engine stopped"))
+
+    def _loop_inner(self):
         while not self._stop:
             batch = self._collect_batch()
             if not batch:
                 continue
+            if self._stop:               # stopped mid-collect: fail the
+                self._held.extend(batch)  # batch via the exit drain
+                break
             corpus = batch[0].corpus
-            if self.switch_fn is not None and corpus != self._active_corpus:
-                self.switch_times.append(self.switch_fn(corpus))
-                self._active_corpus = corpus
-            queries = np.stack([r.query for r in batch])
-            k = max(r.k for r in batch)
-            fn = self.search_fns[corpus]
-            if self.hedge > 1 and self.replicas:
-                futs = [self._pool.submit(self._run_search, rep, queries, k)
-                        for rep in self.replicas[:self.hedge]]
-                done, pending = wait(futs, return_when=FIRST_COMPLETED)
-                ids = list(done)[0].result()
-                for p in pending:
-                    p.cancel()
-            else:
-                ids = fn(queries, k)
+            err = None
+            try:
+                if self.switch_fn is not None \
+                        and corpus != self._active_corpus:
+                    self.switch_times.append(self.switch_fn(corpus))
+                    self._active_corpus = corpus
+                queries = np.stack([r.query for r in batch])
+                k = max(r.k for r in batch)
+                fn = self.search_fns[corpus]
+                if self.hedge > 1 and self.replicas:
+                    ids = self._run_hedged(queries, k)
+                else:
+                    ids = fn(queries, k)
+                ids = np.asarray(ids)     # malformed returns fail the batch
+                if ids.ndim != 2 or ids.shape[0] != len(batch):
+                    raise ValueError(
+                        f"search fn returned shape {ids.shape}, expected "
+                        f"({len(batch)}, k)")
+            except Exception as e:        # noqa: BLE001 — fail the batch,
+                err = e                   # never kill the engine thread
             now = time.perf_counter()
             for i, r in enumerate(batch):
-                r.result = ids[i, :r.k]
                 r.t_done = now
-                self.metrics.append(r.latency_s)
+                if err is not None:
+                    r.error = err
+                else:
+                    r.result = ids[i, :r.k]
+                    self.metrics.append(r.latency_s)
                 r.event.set()
+
+    def _drain(self, err: Exception):
+        """Fail every request still parked in the holdover deque or the
+        queue.  Safe to run from both the loop thread (on exit) and
+        stop(): deque/queue pops are atomic, each request drains once."""
+        leftovers = []
+        while self._held:
+            try:
+                leftovers.append(self._held.popleft())
+            except IndexError:
+                break
+        while True:
+            try:
+                leftovers.append(self.q.get_nowait())
+            except queue.Empty:
+                break
+        for r in leftovers:
+            r.error = err
+            r.event.set()
 
     # -- stats ----------------------------------------------------------------
     def latency_percentiles(self):
@@ -170,6 +336,14 @@ class ServingEngine:
                 "n": len(a)}
 
     def stop(self):
-        self._stop = True
+        with self._submit_lock:
+            self._stop = True
         self._t.join(timeout=2.0)
         self._pool.shutdown(wait=False)
+        # fail whatever never made it into a batch (queue + holdover) so
+        # submit_wait callers see an error instead of a silent timeout;
+        # under _submit_lock no new request can slip in behind the drain.
+        # The loop thread ALSO drains on its own exit, covering requests
+        # it re-parks after this drain when join() timed out mid-collect.
+        with self._submit_lock:
+            self._drain(RuntimeError("engine stopped"))

@@ -1,0 +1,348 @@
+"""Warm-index pool: a byte-budgeted LRU of OPEN `HostIndex` handles.
+
+The paper's headline serving claim (§2.2, §4.4) is that ~10 MB-resident
+AiSAQ indices make it cheap to hold *many* corpora warm simultaneously —
+the RAG-retriever scenario.  The pool is that layer:
+
+  * every open handle is charged for the DRAM it actually holds — the
+    algorithmic residency (`HostIndex.resident_bytes`, paper Table 2) plus
+    its block-cache capacity — and an LRU walk evicts (closes) the
+    least-recently-used unpinned handle once the byte budget overflows,
+  * indices built with the same PQ centroids (hash match in meta.json) are
+    deduplicated: one centroid array is shared by every open handle and
+    charged ONCE — the paper's Table-4 shared-centroid trick, promoted
+    from "fast switch" to "cheap co-residency",
+  * in-flight searches pin their handle (refcounted) so eviction can never
+    close an index mid-read; a pinned-over-budget pool overflows rather
+    than deadlocks and reports it (`budget_overflow`),
+  * hit / miss / eviction / shared-centroid counters feed `stats()`.
+
+`IndexManager` (core.index_switch) is now a thin compat wrapper over a
+budget-for-one pool (`max_open=1`).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import OrderedDict
+from contextlib import contextmanager
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.index_io import HostIndex
+
+
+class _Entry:
+    __slots__ = ("index", "pins", "cent_hash", "load_s")
+
+    def __init__(self, index: HostIndex, cent_hash: Optional[int],
+                 load_s: float):
+        self.index = index
+        self.pins = 0
+        self.cent_hash = cent_hash   # None when the entry OWNS its centroids
+        self.load_s = load_s
+
+
+class WarmIndexPool:
+    """LRU pool of open `HostIndex` handles under an explicit byte budget.
+
+    `budget_bytes=None` means unbounded; `max_open` additionally caps the
+    handle count (the budget-for-one compat mode).  `cache_bytes` is the
+    per-handle block-cache budget passed to `HostIndex.load` and charged
+    to the pool (an open handle's cache IS DRAM the pool holds).
+    """
+
+    def __init__(self, paths: Optional[Dict[str, str]] = None, *,
+                 budget_bytes: Optional[int] = None,
+                 max_open: Optional[int] = None,
+                 mode: Optional[str] = None,
+                 cache_bytes: int = 10 << 20,
+                 strict: bool = False):
+        self.paths: Dict[str, str] = dict(paths or {})
+        self.budget_bytes = budget_bytes
+        self.max_open = max_open
+        self.mode = mode
+        self.cache_bytes = int(cache_bytes)
+        # strict=True: `pin` BLOCKS until the budget genuinely fits instead
+        # of overflowing past pinned handles — the DRAM cap becomes a hard
+        # admission resource (a budget-for-one pool then truly serializes
+        # cross-corpus serving, like the single-active IndexManager did).
+        # Waiting only happens while someone holds a pin (progress is
+        # guaranteed: pins are release-after-search); with no pins
+        # outstanding the pool overflows rather than deadlocks.
+        self.strict = strict
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
+        # centroid dedup pool: hash -> (array, set of corpus names using it)
+        self._cents: Dict[int, Tuple[np.ndarray, set]] = {}
+        self._sizes: Dict[str, int] = {}   # last known entry bytes per name
+        self._loading: set = set()         # names with a load in flight
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.budget_overflow = 0     # evict walks that could not fit budget
+        self.centroid_shares = 0     # loads that reused a pooled array
+        self.strict_waits = 0        # strict-mode pin acquisitions that slept
+
+    # -- registration --------------------------------------------------------
+    def register(self, name: str, path: str):
+        with self._lock:
+            self.paths[name] = path
+
+    def _resolve(self, name: str) -> str:
+        try:
+            return self.paths[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown corpus {name!r}; known corpora: "
+                f"{sorted(self.paths)}") from None
+
+    # -- accounting ----------------------------------------------------------
+    def _entry_bytes(self, e: _Entry) -> int:
+        """DRAM charged to one handle: algorithmic residency plus its
+        block-cache capacity.  Centroids in the dedup pool are charged once
+        at pool level; an entry that OWNS a private centroid copy
+        (share_centroids=False, or no hash in meta) is charged for it."""
+        return e.index.resident_bytes(include_centroids=e.cent_hash is None) \
+            + e.index.cache.capacity_bytes
+
+    def used_bytes(self) -> int:
+        with self._lock:
+            total = sum(self._entry_bytes(e) for e in self._entries.values())
+            total += sum(a.nbytes for a, _ in self._cents.values())
+            return int(total)
+
+    def entry_bytes(self, name: str) -> int:
+        with self._lock:
+            return self._entry_bytes(self._entries[name])
+
+    def centroid_bytes(self) -> int:
+        with self._lock:
+            return int(sum(a.nbytes for a, _ in self._cents.values()))
+
+    # -- open / evict --------------------------------------------------------
+    def _acquire(self, name: str, share_centroids: bool, do_pin: bool
+                 ) -> Tuple[HostIndex, float]:
+        """Hit-or-load a handle.  The disk I/O of a cold load runs OUTSIDE
+        the pool lock (guarded by an in-flight `_loading` claim) so one
+        miss never stalls pins of already-warm corpora; concurrent callers
+        of the SAME corpus wait for the in-flight load instead of
+        duplicating it."""
+        path = self._resolve(name)    # KeyError before any waiting
+        with self._lock:
+            waited = False
+            while True:
+                e = self._entries.get(name)
+                if e is not None:
+                    self._entries.move_to_end(name)
+                    self.hits += 1
+                    if do_pin:
+                        e.pins += 1
+                    return e.index, 0.0
+                if name in self._loading:      # someone is loading it now
+                    self._cond.wait(0.05)
+                    continue
+                if do_pin and self.strict \
+                        and self._must_wait_for_budget(name):
+                    waited = True
+                    self._cond.wait(0.05)
+                    continue
+                self._loading.add(name)
+                break
+            if waited:
+                self.strict_waits += 1
+            self.misses += 1
+        try:
+            t0 = time.perf_counter()
+            shared = None
+            if share_centroids:
+                try:
+                    with open(os.path.join(path, "meta.json")) as f:
+                        peek_hash = json.load(f).get("centroids_hash")
+                except OSError:
+                    peek_hash = None
+                if peek_hash is not None:
+                    with self._lock:
+                        if peek_hash in self._cents:
+                            shared = self._cents[peek_hash][0]
+            idx = HostIndex.load(path, mode=self.mode,
+                                 shared_centroids=shared,
+                                 cache_bytes=self.cache_bytes)
+            load_s = time.perf_counter() - t0
+        except BaseException:
+            with self._lock:
+                self._loading.discard(name)
+                self._cond.notify_all()
+            raise
+        with self._lock:
+            cent_hash = idx.meta.get("centroids_hash") \
+                if share_centroids else None
+            e = _Entry(idx, cent_hash, load_s)
+            if shared is not None:
+                self.centroid_shares += 1
+            if cent_hash is not None:
+                if cent_hash not in self._cents:
+                    self._cents[cent_hash] = (idx.centroids, set())
+                elif idx.centroids is not self._cents[cent_hash][0]:
+                    # two concurrent cold loads of the same hash: the loser
+                    # loaded a private copy before the winner published —
+                    # swap to the pooled array so dedup identity AND the
+                    # charged-once accounting stay true
+                    idx.centroids = self._cents[cent_hash][0]
+                    self.centroid_shares += 1
+                self._cents[cent_hash][1].add(name)
+            self._entries[name] = e
+            self._entries.move_to_end(name)
+            self._sizes[name] = self._entry_bytes(e)
+            if do_pin:
+                e.pins += 1
+            self._evict_to_budget()
+            self._loading.discard(name)
+            self._cond.notify_all()
+            return e.index, load_s
+
+    def _close_entry(self, name: str, e: _Entry):
+        if e.cent_hash is not None and e.cent_hash in self._cents:
+            _, users = self._cents[e.cent_hash]
+            users.discard(name)
+            if not users:
+                del self._cents[e.cent_hash]
+        e.index.close()
+
+    def _over_budget(self) -> bool:
+        if self.max_open is not None and len(self._entries) > self.max_open:
+            return True
+        if self.budget_bytes is None:
+            return False
+        total = sum(self._entry_bytes(e) for e in self._entries.values())
+        total += sum(a.nbytes for a, _ in self._cents.values())
+        return total > self.budget_bytes
+
+    def _evict_to_budget(self):
+        while self._over_budget():
+            # never evict the MRU entry: it is the handle the caller is
+            # acquiring RIGHT NOW (possibly pre-pin) — closing it would
+            # hand out a dead fd
+            names = list(self._entries)
+            victim = next((n for n in names[:-1]
+                           if self._entries[n].pins == 0), None)
+            if victim is None:           # everything evictable is pinned:
+                self.budget_overflow += 1  # overflow, don't deadlock
+                return
+            e = self._entries.pop(victim)
+            self._close_entry(victim, e)
+            self.evictions += 1
+
+    # -- public acquisition --------------------------------------------------
+    def ensure(self, name: str, share_centroids: bool = True) -> float:
+        """Open corpus `name` if not already warm.  Returns the load
+        wall-time in seconds (0.0 on a pool hit) — the paper's switch-time
+        metric."""
+        return self._acquire(name, share_centroids, do_pin=False)[1]
+
+    def _must_wait_for_budget(self, name: str) -> bool:
+        """strict-mode admission predicate (lock held): would opening
+        `name` — after evicting every unpinned handle — still overflow?
+        Only meaningful to wait while a pin is outstanding (its release is
+        what frees memory); otherwise overflowing is the only way to make
+        progress."""
+        pinned = [e for e in self._entries.values() if e.pins > 0]
+        if not pinned:
+            return False
+        est = self._sizes.get(name)
+        if est is None:
+            known = [self._entry_bytes(e) for e in self._entries.values()]
+            est = int(sum(known) / len(known)) if known else 0
+        if self.max_open is not None and len(pinned) + 1 > self.max_open:
+            return True
+        if self.budget_bytes is None:
+            return False
+        keep = sum(self._entry_bytes(e) for e in pinned)
+        keep += sum(a.nbytes for a, _ in self._cents.values())
+        return keep + est > self.budget_bytes
+
+    def pin(self, name: str, share_centroids: bool = True
+            ) -> Tuple[HostIndex, float]:
+        """Acquire a handle for an in-flight search: opens (or touches) the
+        corpus and increments its pin count so eviction cannot close it.
+        Returns (index, load_seconds) — load_seconds is 0.0 on a hit.
+        In a `strict` pool a miss blocks until the budget can fit the new
+        handle (see __init__)."""
+        return self._acquire(name, share_centroids, do_pin=True)
+
+    def unpin(self, name: str):
+        with self._lock:
+            e = self._entries.get(name)
+            if e is None:
+                return                   # already evicted under overflow
+            e.pins = max(0, e.pins - 1)
+            if e.pins == 0:
+                self._evict_to_budget()  # deferred eviction now possible
+            self._cond.notify_all()      # strict waiters re-check the budget
+
+    @contextmanager
+    def lease(self, name: str, share_centroids: bool = True):
+        """Context-managed pin: `with pool.lease(c) as (idx, load_s): ...`"""
+        idx, load_s = self.pin(name, share_centroids)
+        try:
+            yield idx, load_s
+        finally:
+            self.unpin(name)
+
+    def peek(self, name: str) -> Optional[HostIndex]:
+        """The open handle for `name`, or None — no LRU touch, no load."""
+        with self._lock:
+            e = self._entries.get(name)
+            return None if e is None else e.index
+
+    def open_corpora(self) -> List[str]:
+        with self._lock:
+            return list(self._entries)
+
+    def pinned(self, name: str) -> int:
+        with self._lock:
+            e = self._entries.get(name)
+            return 0 if e is None else e.pins
+
+    # -- stats / lifecycle ---------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(
+                open=len(self._entries),
+                registered=len(self.paths),
+                hits=self.hits,
+                misses=self.misses,
+                evictions=self.evictions,
+                budget_overflow=self.budget_overflow,
+                centroid_shares=self.centroid_shares,
+                strict_waits=self.strict_waits,
+                used_bytes=self.used_bytes(),
+                budget_bytes=self.budget_bytes,
+                max_open=self.max_open,
+                centroid_bytes=self.centroid_bytes(),
+                pinned={n: e.pins for n, e in self._entries.items()
+                        if e.pins},
+            )
+
+    def close(self, timeout: float = 5.0):
+        """Close every open handle.  Waits (bounded) for outstanding pins
+        first — closing an fd under an in-flight search would turn the
+        'pins protect readers' guarantee into an EBADF at teardown."""
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while self._loading \
+                    or any(e.pins > 0 for e in self._entries.values()):
+                # in-flight loads must publish first, else their handle
+                # would land in the pool (open fd) after close() returns
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    break                # give up: teardown wins
+                self._cond.wait(min(left, 0.05))
+            for name, e in list(self._entries.items()):
+                self._close_entry(name, e)
+            self._entries.clear()
+            self._cents.clear()

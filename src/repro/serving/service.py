@@ -1,0 +1,275 @@
+"""Multi-tenant retrieval service: per-corpus queues + worker scheduling.
+
+`ServingEngine` (serving.engine) serializes every corpus through one FIFO
+and one loop thread, so two tenants ping-ponging corpora destroy each
+other's throughput.  This service is the scheduling layer the paper's
+many-warm-corpora claim needs:
+
+  * one queue PER corpus — a burst on one tenant can never reorder or
+    starve another tenant's requests (each corpus stays strictly FIFO),
+  * N workers pick corpora round-robin among the non-empty queues; a
+    corpus is served by at most one worker at a time (per-corpus batches
+    stay FIFO) while DIFFERENT corpora serve concurrently,
+  * indices come from a `WarmIndexPool` lease — pinned for the duration of
+    the batch so eviction can never close an index mid-search, and the
+    pool-miss load time is recorded as that corpus's switch cost,
+  * admission control: a queue deeper than `max_queue_depth` rejects the
+    submit with `BackpressureError` (bounded memory, bounded tail) and
+    counts it,
+  * per-corpus telemetry — completed / rejected / batches / switches /
+    latency percentiles / QPS — exported as one `stats()` dict.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.engine import Request, make_host_search_fn
+from repro.serving.pool import WarmIndexPool
+
+
+class BackpressureError(RuntimeError):
+    """Raised by `submit` when a corpus queue is at max_queue_depth."""
+
+    def __init__(self, corpus: str, depth: int, limit: int):
+        super().__init__(
+            f"corpus {corpus!r} queue at admission limit "
+            f"({depth}/{limit}); retry later")
+        self.corpus = corpus
+        self.depth = depth
+        self.limit = limit
+
+
+_LATENCY_WINDOW = 4096       # percentile window per corpus (bounded memory)
+
+
+class _CorpusTelemetry:
+    __slots__ = ("completed", "rejected", "batches", "switches",
+                 "switch_s", "latencies", "first_submit", "last_done",
+                 "errors")
+
+    def __init__(self):
+        self.completed = 0
+        self.rejected = 0
+        self.batches = 0
+        self.switches = 0
+        self.switch_s = 0.0
+        # bounded ring: a long-lived service must not grow per-request
+        # state; percentiles are over the most recent window
+        self.latencies: deque = deque(maxlen=_LATENCY_WINDOW)
+        self.first_submit: Optional[float] = None
+        self.last_done: Optional[float] = None
+        self.errors = 0
+
+
+class RetrievalService:
+    """search_fn(index, queries (B, d), k) -> ids (B, k); the default runs
+    `HostIndex.search_batch` with this service's L/w/rerank/adc knobs."""
+
+    def __init__(self, pool: WarmIndexPool, *, num_workers: int = 2,
+                 max_batch: int = 16, max_wait_ms: float = 2.0,
+                 max_queue_depth: int = 256, L: int = 48, w: int = 4,
+                 rerank: Optional[int] = None, adc_dtype: str = "f32",
+                 prefetch: int = 0,
+                 search_fn: Optional[Callable] = None):
+        self.pool = pool
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self.max_queue_depth = max_queue_depth
+        self.L, self.w = L, w
+        self.rerank = rerank
+        self.adc_dtype = adc_dtype
+        self.prefetch = prefetch
+        self._search_fn = search_fn or self._default_search
+        self._cond = threading.Condition()
+        self._queues: Dict[str, deque] = {}
+        self._busy: set = set()
+        self._rr: List[str] = []         # round-robin corpus order
+        self._rr_next = 0
+        self._tel: Dict[str, _CorpusTelemetry] = {}
+        self._stop = False
+        self._t0 = time.perf_counter()
+        self._workers = [
+            threading.Thread(target=self._worker, name=f"retrieval-w{i}",
+                             daemon=True)
+            for i in range(max(1, num_workers))]
+        for t in self._workers:
+            t.start()
+
+    # -- client API ----------------------------------------------------------
+    def _default_search(self, index, queries: np.ndarray, k: int
+                        ) -> np.ndarray:
+        # delegate to the factory so the beam-width-covers-rerank-depth
+        # rule lives in exactly one place (engine.make_host_search_fn)
+        return make_host_search_fn(
+            index, L=self.L, w=self.w, prefetch=self.prefetch,
+            adc_dtype=self.adc_dtype, rerank=self.rerank)(queries, k)
+
+    def submit(self, query: np.ndarray, corpus: str = "default", k: int = 10
+               ) -> Request:
+        self.pool._resolve(corpus)       # one source of the naming KeyError
+        r = Request(query=query, corpus=corpus, k=k)
+        with self._cond:
+            if self._stop:
+                raise RuntimeError("service stopped")
+            q = self._queues.get(corpus)
+            if q is None:
+                q = self._queues[corpus] = deque()
+                self._rr.append(corpus)
+                self._tel[corpus] = _CorpusTelemetry()
+            tel = self._tel[corpus]
+            if len(q) >= self.max_queue_depth:
+                tel.rejected += 1
+                raise BackpressureError(corpus, len(q), self.max_queue_depth)
+            if tel.first_submit is None:
+                tel.first_submit = r.t_submit
+            q.append(r)
+            self._cond.notify()
+        return r
+
+    def submit_wait(self, query, corpus: str = "default", k: int = 10,
+                    timeout: float = 30.0) -> Request:
+        r = self.submit(query, corpus, k)
+        if not r.event.wait(timeout):
+            raise TimeoutError(
+                f"request to corpus {corpus!r} not served in {timeout}s")
+        if r.error is not None:
+            raise r.error
+        return r
+
+    # -- scheduling ----------------------------------------------------------
+    def _pick_corpus(self) -> Optional[str]:
+        """Next non-empty, non-busy corpus, round-robin (lock held)."""
+        n = len(self._rr)
+        for off in range(n):
+            c = self._rr[(self._rr_next + off) % n]
+            if self._queues[c] and c not in self._busy:
+                self._rr_next = (self._rr_next + off + 1) % n
+                return c
+        return None
+
+    def _worker(self):
+        while True:
+            with self._cond:
+                corpus = self._pick_corpus()
+                while corpus is None:
+                    if self._stop:
+                        return
+                    self._cond.wait(0.1)
+                    corpus = self._pick_corpus()
+                self._busy.add(corpus)
+                batch = [self._queues[corpus].popleft()]
+            try:
+                # linger up to max_wait for the batch to fill
+                deadline = time.perf_counter() + self.max_wait
+                while len(batch) < self.max_batch:
+                    with self._cond:
+                        if self._queues[corpus]:
+                            batch.append(self._queues[corpus].popleft())
+                            continue
+                        left = deadline - time.perf_counter()
+                        if left <= 0 or self._stop:
+                            break
+                        self._cond.wait(left)
+                self._serve(corpus, batch)
+            finally:
+                with self._cond:
+                    self._busy.discard(corpus)
+                    self._cond.notify_all()
+
+    def _serve(self, corpus: str, batch: List[Request]):
+        err: Optional[Exception] = None
+        ids = None
+        load_s = 0.0
+        try:
+            # inside the try: a malformed query (ragged dims) must fail the
+            # batch, not kill the worker thread
+            queries = np.stack([r.query for r in batch])
+            k = max(r.k for r in batch)
+            with self.pool.lease(corpus) as (idx, load_s):
+                ids = self._search_fn(idx, queries, k)
+            ids = np.asarray(ids)        # malformed returns fail the batch
+            if ids.ndim != 2 or ids.shape[0] != len(batch):
+                raise ValueError(
+                    f"search_fn returned shape {ids.shape}, expected "
+                    f"({len(batch)}, k)")
+        except Exception as e:           # noqa: BLE001 — fail the batch,
+            err = e                      # never kill the worker thread
+        now = time.perf_counter()
+        with self._cond:
+            tel = self._tel[corpus]
+            tel.batches += 1
+            if load_s:
+                tel.switches += 1
+                tel.switch_s += load_s
+            for i, r in enumerate(batch):
+                r.t_done = now
+                if err is not None:
+                    r.error = err
+                    tel.errors += 1
+                else:
+                    r.result = ids[i, :r.k]
+                    tel.completed += 1
+                    tel.latencies.append(r.latency_s)
+                tel.last_done = now
+                r.event.set()
+
+    # -- telemetry -----------------------------------------------------------
+    def stats(self) -> dict:
+        with self._cond:
+            corpora = {}
+            for c, tel in self._tel.items():
+                lat = np.asarray(tel.latencies, dtype=np.float64)
+                span = None
+                if tel.first_submit is not None and tel.last_done is not None:
+                    span = max(tel.last_done - tel.first_submit, 1e-9)
+                corpora[c] = dict(
+                    completed=tel.completed,
+                    rejected=tel.rejected,
+                    errors=tel.errors,
+                    batches=tel.batches,
+                    mean_batch=(tel.completed / tel.batches
+                                if tel.batches else 0.0),
+                    switches=tel.switches,
+                    switch_ms_total=tel.switch_s * 1e3,
+                    qps=(tel.completed / span if span else 0.0),
+                    queued=len(self._queues.get(c, ())),
+                    **({"p50_ms": float(np.percentile(lat, 50) * 1e3),
+                        "p95_ms": float(np.percentile(lat, 95) * 1e3),
+                        "p99_ms": float(np.percentile(lat, 99) * 1e3)}
+                       if lat.size else {}))
+            all_lat = np.concatenate(
+                [np.asarray(t.latencies) for t in self._tel.values()]
+            ) if any(t.latencies for t in self._tel.values()) else \
+                np.zeros(0)
+            total_done = sum(t.completed for t in self._tel.values())
+            return dict(
+                corpora=corpora,
+                total_completed=total_done,
+                total_rejected=sum(t.rejected for t in self._tel.values()),
+                total_switches=sum(t.switches for t in self._tel.values()),
+                uptime_s=time.perf_counter() - self._t0,
+                **({"p50_ms": float(np.percentile(all_lat, 50) * 1e3),
+                    "p99_ms": float(np.percentile(all_lat, 99) * 1e3)}
+                   if all_lat.size else {}),
+                pool=self.pool.stats())
+
+    # -- lifecycle -----------------------------------------------------------
+    def stop(self, timeout: float = 5.0):
+        with self._cond:
+            self._stop = True
+            # fail whatever is still queued — nobody will serve it
+            leftovers = [r for q in self._queues.values() for r in q]
+            for q in self._queues.values():
+                q.clear()
+            self._cond.notify_all()
+        err = RuntimeError("service stopped")
+        for r in leftovers:
+            r.error = err
+            r.event.set()
+        for t in self._workers:
+            t.join(timeout)

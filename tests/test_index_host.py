@@ -69,13 +69,14 @@ def test_index_switch_shared_centroids(tmp_path, small_corpus, pq_artifacts):
         paths[f"c{i}"] = p
     mgr = IndexManager(paths)
     t_first = mgr.switch("c0")
+    cents_c0 = mgr.active.centroids
     t_shared = mgr.switch("c1")
     ids, stats = mgr.search(q[0], 5, L=24)
     assert ids.shape == (5,)
     assert t_shared > 0
     # shared-centroid switch must not reload pq_centroids.npy: verify the
-    # active index reuses the same array object
-    assert mgr.active.centroids is mgr._centroids
+    # newly-active index reuses c0's very array object (pool dedup)
+    assert mgr.active.centroids is cents_c0
     mgr2 = IndexManager(paths)
     mgr2.switch("c0")
     c0 = mgr2.active.centroids

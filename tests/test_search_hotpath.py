@@ -325,6 +325,105 @@ def test_serving_host_fn_accepts_prefetch_and_adc(index_dirs, small_corpus):
 
 
 # ---------------------------------------------------------------------------
+# exact rerank tier (rerank= knob; multi-tenant serving PR)
+# ---------------------------------------------------------------------------
+
+
+def test_rerank_matches_ref_bitexact(index_dirs, small_corpus):
+    """Every rerank tier (PQ-only, shallow, deep) returns EXACTLY the ids
+    of the extended scalar oracle, in both placement modes and both ADC
+    dtypes — including the rerank-I/O accounting."""
+    base, q, gt = small_corpus
+    for mode, path in index_dirs.items():
+        idx = HostIndex.load(path)
+        for rr in (0, 10, 25, 60):
+            for adc in ("f32", "int8"):
+                ids_b, st_b = idx.search_batch(q, 10, L=40, rerank=rr,
+                                               adc_dtype=adc)
+                ids_r, st_r = idx.search_batch_ref(q, 10, L=40, rerank=rr,
+                                                   adc_dtype=adc)
+                np.testing.assert_array_equal(ids_b, ids_r)
+                assert [s.rerank_ios for s in st_b] == \
+                    [s.rerank_ios for s in st_r]
+                assert [s.ios for s in st_b] == [s.ios for s in st_r]
+        idx.close()
+
+
+def test_rerank_recall_at_least_pq_only(index_dirs, small_corpus):
+    """Acceptance: exact rescoring of the top-r candidates can only improve
+    on the PQ-only ranking of the same list (provably per query: the
+    groundtruth is the exact metric's top-k)."""
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    rec = {}
+    for rr in (0, 40):
+        ids, _ = idx.search_batch(q, 10, L=40, rerank=rr)
+        rec[rr] = recall_at(ids, gt, 10)
+    assert rec[40] >= rec[0]
+    assert rec[40] >= 0.8
+    idx.close()
+
+
+def test_rerank_reuses_traversal_chunks(index_dirs, small_corpus):
+    """Candidates that were expanded during traversal must NOT be fetched
+    again: rerank I/O only covers the unexpanded tail of the candidate
+    list (and is bounded by it)."""
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    ids, stats = idx.search_batch(q, 10, L=40, rerank=40)
+    _, stats0 = idx.search_batch(q, 10, L=40)
+    for s, s0 in zip(stats, stats0):
+        assert s.rerank_ios <= 40
+        # traversal I/O unchanged; rerank adds only the tail fetches
+        assert s.ios == s0.ios + s.rerank_ios
+    idx.close()
+
+
+def test_rerank_single_query_and_relabel(tmp_path, small_corpus, built_graph,
+                                         pq_artifacts):
+    """rerank= threads through `search`, and survives graph-locality
+    relabeling (candidate ids live in storage space until _map_out)."""
+    from repro.core.index_io import write_index
+    base, q, gt = small_corpus
+    cents, codes = pq_artifacts
+    p = str(tmp_path / "rl")
+    write_index(p, vectors=base, graph=built_graph, centroids=cents,
+                codes=codes, metric="l2", mode="aisaq", relabel=True)
+    idx = HostIndex.load(p)
+    for rr in (0, 30):
+        a, _ = idx.search(q[0], 10, L=40, rerank=rr)
+        b, _ = idx.search_ref(q[0], 10, L=40, rerank=rr)
+        np.testing.assert_array_equal(a, b)
+        assert set(map(int, a)) <= set(range(len(base)))  # original labels
+    ids, _ = idx.search_batch(q, 10, L=40, rerank=40)
+    assert recall_at(ids, gt, 10) >= 0.8
+    idx.close()
+
+
+def test_serving_fns_accept_rerank(index_dirs, small_corpus, built_graph,
+                                   pq_artifacts):
+    """Both serving-tier factories expose the rerank knob; the device tier
+    rescoring runs through kernels.rerank (ref backend off-TPU)."""
+    from repro.core.device_index import from_arrays
+    from repro.serving.engine import make_device_search_fn, \
+        make_host_search_fn
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    fn = make_host_search_fn(idx, L=40, rerank=40)
+    ids = fn(q[:4], 10)
+    ref, _ = idx.search_batch(q[:4], 10, L=40, rerank=40)
+    np.testing.assert_array_equal(ids, ref)
+    idx.close()
+    cents, codes = pq_artifacts
+    didx, lay = from_arrays(base, built_graph, cents, codes, mode="aisaq")
+    dfn = make_device_search_fn(didx, lay, metric="l2", L=40, backend="ref",
+                                rerank=32)
+    dids = dfn(q[:4], 10)
+    assert dids.shape == (4, 10)
+    assert recall_at(dids, gt[:4], 10) >= 0.8
+
+
+# ---------------------------------------------------------------------------
 # vectorized helpers
 # ---------------------------------------------------------------------------
 

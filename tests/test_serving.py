@@ -1,6 +1,7 @@
 import time
 
 import numpy as np
+import pytest
 
 from repro.serving.engine import ServingEngine
 
@@ -50,3 +51,248 @@ def test_corpus_switch_called():
     assert calls == ["a", "b"]
     assert len(eng.switch_times) == 2
     eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# hedging fix: first SUCCESSFUL completion wins; wasted work is accounted
+# ---------------------------------------------------------------------------
+
+
+def _failing_fn(delay_s=0.0):
+    def fn(queries, k):
+        if delay_s:
+            time.sleep(delay_s)
+        raise ValueError("replica down")
+    return fn
+
+
+def test_hedge_skips_failed_replica():
+    """A fast-failing replica must NOT win the hedge race (the old code
+    took `list(done)[0].result()`, which could pick the failure)."""
+    fail, good = _failing_fn(), _search_fn(0.02)
+    for _ in range(5):                    # old bug was racy: hammer it
+        eng = ServingEngine({"default": good}, hedge=2,
+                            replicas=[fail, good], max_wait_ms=1.0)
+        r = eng.submit_wait(np.ones(4, np.float32))
+        assert r.error is None
+        assert r.result is not None and r.result.shape == (10,)
+        assert eng.hedge_stats["failed"] >= 1
+        eng.stop()
+
+
+def test_hedge_all_replicas_fail_sets_error():
+    eng = ServingEngine({"default": _failing_fn()}, hedge=2,
+                        replicas=[_failing_fn(), _failing_fn(0.01)],
+                        max_wait_ms=1.0)
+    r = eng.submit_wait(np.ones(4, np.float32))
+    assert r.result is None
+    assert isinstance(r.error, ValueError)
+    assert eng.hedge_stats["failed"] == 2
+    eng.stop()
+
+
+def test_hedge_wasted_work_accounted():
+    """Both replicas succeed; the loser's completed work counts as wasted
+    (Future.cancel() on a running thread is a no-op — the engine must not
+    pretend the work disappeared)."""
+    fast, slow = _search_fn(0.005), _search_fn(0.08)
+    eng = ServingEngine({"default": fast}, hedge=2,
+                        replicas=[slow, fast], max_wait_ms=1.0)
+    r = eng.submit_wait(np.ones(4, np.float32))
+    assert r.result is not None
+    time.sleep(0.15)                      # let the slow loser finish
+    assert eng.hedge_stats["batches"] == 1
+    assert eng.hedge_stats["wasted"] == 1
+    eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# _collect_batch holdover fix (regression for the re-queue starvation bug)
+# ---------------------------------------------------------------------------
+
+
+def test_foreign_corpus_request_not_starved():
+    """Old bug: a different-corpus request was pushed to the BACK of the
+    FIFO, so sustained load on corpus `a` could starve a `b` request
+    indefinitely. With the holdover deque, `b` is served at the next batch
+    head — before `a` requests that arrived after it."""
+    eng = ServingEngine({"a": _search_fn(0.01), "b": _search_fn(0.01)},
+                        max_batch=4, max_wait_ms=20.0)
+    head = [eng.submit(np.ones(4, np.float32), corpus="a")
+            for _ in range(3)]
+    rb = eng.submit(np.ones(4, np.float32), corpus="b")
+    tail = [eng.submit(np.ones(4, np.float32), corpus="a")
+            for _ in range(8)]
+    for r in head + [rb] + tail:
+        r.event.wait(10.0)
+        assert r.result is not None
+    # b (submitted before the tail) must complete before the LAST tail
+    # request — under the old re-queue-to-back it would finish dead last
+    assert rb.t_done <= tail[-1].t_done
+    assert eng.latency_percentiles()["n"] == 12
+    eng.stop()
+
+
+def test_stop_fails_parked_requests():
+    """stop() must error out requests still sitting in the queue or the
+    holdover deque — a submit_wait caller must not hang to its timeout."""
+    eng = ServingEngine({"a": _search_fn(0.2), "b": _search_fn(0.2)},
+                        max_batch=2, max_wait_ms=1.0)
+    ra = eng.submit(np.ones(4, np.float32), corpus="a")
+    parked = [eng.submit(np.ones(4, np.float32), corpus="b")
+              for _ in range(3)]
+    ra.event.wait(5.0)                    # first a-batch in flight/done
+    eng.stop()
+    for r in parked:
+        assert r.event.wait(1.0)
+        assert r.result is not None or r.error is not None
+    eng.stop()                            # idempotent
+    with pytest.raises(RuntimeError):     # dead loop accepts no work
+        eng.submit(np.ones(4, np.float32))
+
+
+def test_held_requests_preserve_per_corpus_fifo():
+    eng = ServingEngine({"a": _search_fn(0.01), "b": _search_fn(0.01)},
+                        max_batch=2, max_wait_ms=10.0)
+    rs = []
+    for corpus in ("a", "b", "a", "b", "b", "a"):
+        rs.append((corpus, eng.submit(np.ones(4, np.float32),
+                                      corpus=corpus)))
+    for _, r in rs:
+        r.event.wait(10.0)
+        assert r.result is not None
+    for corpus in ("a", "b"):
+        done = [r.t_done for c, r in rs if c == corpus]
+        assert done == sorted(done)       # FIFO within each corpus
+    eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# RetrievalService: per-corpus queues, concurrency, admission control
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def service_pool(tmp_path, small_corpus, pq_artifacts):
+    from repro.core.index_io import write_index
+    from repro.core.vamana import build_vamana
+    from repro.serving.pool import WarmIndexPool
+    base, _, _ = small_corpus
+    cents, codes = pq_artifacts
+    paths = {}
+    for i in range(2):
+        sl = slice(i * 700, (i + 1) * 700)
+        g = build_vamana(base[sl], R=12, L=24, seed=i)
+        p = str(tmp_path / f"t{i}")
+        write_index(p, vectors=base[sl], graph=g, centroids=cents,
+                    codes=codes[sl], metric="l2", mode="aisaq")
+        paths[f"t{i}"] = p
+    pool = WarmIndexPool(paths, cache_bytes=256 << 10)
+    yield pool
+    pool.close()
+
+
+def test_retrieval_service_multicorpus_integration(service_pool,
+                                                   small_corpus):
+    from repro.core.index_io import HostIndex
+    from repro.serving.service import RetrievalService
+    base, q, _ = small_corpus
+    refs = {}
+    for name, path in service_pool.paths.items():
+        idx = HostIndex.load(path)
+        refs[name], _ = idx.search_batch(q, 5, L=24)
+        idx.close()
+    svc = RetrievalService(service_pool, num_workers=2, max_batch=4,
+                           max_wait_ms=1.0, L=24)
+    reqs = [(f"t{i % 2}", i % len(q),
+             svc.submit(q[i % len(q)], corpus=f"t{i % 2}", k=5))
+            for i in range(16)]
+    for name, qi, r in reqs:
+        r.event.wait(10.0)
+        assert r.error is None and r.result is not None
+        np.testing.assert_array_equal(r.result, refs[name][qi])
+    st = svc.stats()
+    assert st["total_completed"] == 16
+    for name in ("t0", "t1"):
+        c = st["corpora"][name]
+        assert c["completed"] == 8 and c["switches"] == 1
+        assert c["p99_ms"] >= c["p50_ms"] > 0
+        assert c["qps"] > 0
+    assert st["pool"]["misses"] == 2      # one load per corpus, ever
+    svc.stop()
+
+
+def test_service_corpora_serve_concurrently():
+    """Two corpora, two workers, a deliberately slow search: total wall
+    time must be closer to ONE search than two (the ServingEngine this
+    replaces serialized every corpus through one loop thread)."""
+    from repro.serving.pool import WarmIndexPool
+    from repro.serving.service import RetrievalService
+    delay = 0.3
+
+    def slow_fn(idx, queries, k):
+        time.sleep(delay)
+        return np.tile(np.arange(k)[None], (queries.shape[0], 1))
+
+    pool = WarmIndexPool({"a": "/nonexistent-a", "b": "/nonexistent-b"})
+    pool.pin = lambda name, share_centroids=True: (None, 0.0)  # no disk
+    pool.unpin = lambda name: None
+    svc = RetrievalService(pool, num_workers=2, max_wait_ms=1.0,
+                           search_fn=slow_fn)
+    t0 = time.perf_counter()
+    ra = svc.submit(np.ones(4, np.float32), corpus="a", k=5)
+    rb = svc.submit(np.ones(4, np.float32), corpus="b", k=5)
+    ra.event.wait(5.0), rb.event.wait(5.0)
+    wall = time.perf_counter() - t0
+    assert ra.result is not None and rb.result is not None
+    assert wall < 1.8 * delay             # overlapped, not serialized
+    svc.stop()
+
+
+def test_service_admission_control_rejects(service_pool, small_corpus):
+    from repro.serving.service import BackpressureError, RetrievalService
+    base, q, _ = small_corpus
+
+    def stall(idx, queries, k):
+        time.sleep(0.2)
+        return np.zeros((queries.shape[0], k), np.int64)
+
+    svc = RetrievalService(service_pool, num_workers=1, max_queue_depth=2,
+                           max_wait_ms=0.5, search_fn=stall)
+    rejected = 0
+    for _ in range(12):
+        try:
+            svc.submit(q[0], corpus="t0", k=5)
+        except BackpressureError as e:
+            rejected += 1
+            assert e.corpus == "t0" and e.limit == 2
+    assert rejected > 0
+    assert svc.stats()["total_rejected"] == rejected
+    assert svc.stats()["corpora"]["t0"]["rejected"] == rejected
+    svc.stop()
+
+
+def test_service_unknown_corpus_and_stop_drains(service_pool, small_corpus):
+    from repro.serving.service import RetrievalService
+    base, q, _ = small_corpus
+    svc = RetrievalService(service_pool, num_workers=1, max_wait_ms=0.5)
+    with pytest.raises(KeyError, match="unknown corpus"):
+        svc.submit(q[0], corpus="nope")
+    svc.stop()
+    with pytest.raises(RuntimeError):
+        svc.submit(q[0], corpus="t0")
+
+
+def test_service_submit_wait_timeout_raises(service_pool, small_corpus):
+    from repro.serving.service import RetrievalService
+    base, q, _ = small_corpus
+
+    def stall(idx, queries, k):
+        time.sleep(0.5)
+        return np.zeros((queries.shape[0], k), np.int64)
+
+    svc = RetrievalService(service_pool, num_workers=1, max_wait_ms=0.5,
+                           search_fn=stall)
+    with pytest.raises(TimeoutError):
+        svc.submit_wait(q[0], corpus="t0", timeout=0.05)
+    svc.stop()
