@@ -5,7 +5,7 @@ reference, per cache budget — QPS, speedup, parity, syscalls/hop, hit rate.
 
 Cold path (PR 3): the regime AiSAQ actually targets — every hop hits the
 SSD. Measures, at the paper's 10 MB budget with a freshly-loaded (empty)
-cache, the {no-relabel, relabel} x {prefetch off/on} grid:
+cache, the {no-relabel, relabel} x {prefetch off/on} x {pipeline} grid:
   * demand syscalls per hop iteration (the blocking reads beam search
     waits on — the headline acceptance metric),
   * background prefetch I/O reported separately (speculation is NOT free
@@ -13,6 +13,11 @@ cache, the {no-relabel, relabel} x {prefetch off/on} grid:
   * QPS, result parity vs the scalar reference, recall (ids are mapped
     back to original labels on relabeled indices, so groundtruth applies
     unchanged), and the block-locality score of each layout.
+
+Pipeline overlap (PR 5): the two-hop in-flight traversal engine
+(core.traversal) — per-hop BLOCKED WAIT (time the traversal thread spent
+inside demand fetches) vs compute for serial and pipelined runs at the
+10 MB budget, with total I/O conserved and reported.
 
 Cache counters are explicitly reset at every phase boundary so each cell
 of the report is attributable to exactly one run. BENCH_search.json
@@ -34,7 +39,8 @@ import numpy as np
 from benchmarks import common as C
 from repro.core.index_io import HostIndex, recall_at
 
-SCHEMA_VERSION = 3          # 2 = PR 2 (warm path only); 3 adds cold_path
+SCHEMA_VERSION = 4          # 2 = PR 2 (warm path only); 3 adds cold_path;
+                            # 4 adds the pipeline column + overlap section
 K, L, W = 10, 40, 4
 BUDGETS = (0, 10 << 20, 64 << 20)     # paper's ~10 MB knob + off + roomy
 COLD_BUDGET = 10 << 20
@@ -46,17 +52,22 @@ def _stats_sum(stats, field):
     return int(sum(getattr(s, field) for s in stats))
 
 
-def _run_phase(idx, q, ref_ids, gt, *, prefetch=0, adc_dtype="f32"):
+def _run_phase(idx, q, ref_ids, gt, *, prefetch=0, adc_dtype="f32",
+               pipeline=None, gap=None):
     """One measured search_batch pass with counters reset at entry."""
     idx.cache.wait_prefetch()           # nothing from a prior phase leaks
     idx.cache.counters.reset()
     t0 = time.perf_counter()
     ids, stats = idx.search_batch(q, K, L=L, w=W, prefetch=prefetch,
-                                  adc_dtype=adc_dtype)
+                                  adc_dtype=adc_dtype, pipeline=pipeline,
+                                  gap=gap)
     wall = time.perf_counter() - t0
     idx.cache.wait_prefetch()           # land stragglers before reading
     c = idx.cache.counters
     hop_iters = max(s.hops for s in stats)
+    # whole-batch overlap totals live on the lead query (see SearchStats)
+    blocked_s = stats[0].blocked_wait_s
+    compute_s = stats[0].compute_s
     out = dict(
         wall_s=wall, qps=len(q) / wall,
         identical_to_ref=bool(np.array_equal(ids, ref_ids)),
@@ -72,9 +83,14 @@ def _run_phase(idx, q, ref_ids, gt, *, prefetch=0, adc_dtype="f32"):
         cache_hit_rate=idx.cache.hit_rate(),
         bytes_read=c.bytes_read,
         cache_bytes_used=idx.cache_bytes_used(),
+        pipelined=bool(stats[0].pipelined),
+        blocked_wait_s=blocked_s,
+        blocked_wait_per_hop_ms=blocked_s / hop_iters * 1e3,
+        compute_s=compute_s,
         prefetch=dict(depth=prefetch, syscalls=c.prefetch_syscalls,
                       bytes=c.prefetch_bytes, issued=c.prefetch_issued,
-                      hits=c.prefetch_hits, wasted=c.prefetch_wasted))
+                      hits=c.prefetch_hits, wasted=c.prefetch_wasted,
+                      errors=c.prefetch_errors))
     return ids, out
 
 
@@ -112,9 +128,20 @@ def bench_mode(mode: str, m: int = C.DEFAULT_M) -> dict:
     return out
 
 
+# cold-path grid cells: (prefetch, pipeline).  The pipeline column only
+# exists where prefetch > 0 (with no background reads there is nothing to
+# keep in flight); pf0 is the fully serial demand-path baseline.
+COLD_CELLS = ((0, False), (PREFETCH, False), (PREFETCH, True))
+
+
+def _cell_name(pf: int, pl: bool) -> str:
+    return f"prefetch_{pf}" + ("_pipelined" if pl else "")
+
+
 def bench_cold_path(m: int = C.DEFAULT_M) -> dict:
-    """The {relabel} x {prefetch} grid, each cell on a freshly-loaded
-    (empty-cache) index at the 10 MB budget — the all-in-storage regime."""
+    """The {relabel} x {prefetch} x {pipeline} grid, each cell on a
+    freshly-loaded (empty-cache) index at the 10 MB budget — the
+    all-in-storage regime."""
     from repro.core.relabel import block_locality_score
     base, q, gt = C.corpus()
     g = C.graph(base)
@@ -134,13 +161,14 @@ def bench_cold_path(m: int = C.DEFAULT_M) -> dict:
         section["variants"][vname] = {
             "nodes_per_block": npb,
             "block_locality": block_locality_score(g, o2n, npb)}
-        for pf in (0, PREFETCH):
+        for pf, pl in COLD_CELLS:
             idx = HostIndex.load(path, cache_bytes=COLD_BUDGET)  # cold cache
-            _, r = _run_phase(idx, q, ref_ids, gt, prefetch=pf)
-            section["variants"][vname][f"prefetch_{pf}"] = r
+            _, r = _run_phase(idx, q, ref_ids, gt, prefetch=pf, pipeline=pl)
+            section["variants"][vname][_cell_name(pf, pl)] = r
             idx.close()
     base_r = section["variants"]["no_relabel"]["prefetch_0"]
-    best_r = section["variants"]["relabel"][f"prefetch_{PREFETCH}"]
+    best_r = section["variants"]["relabel"][
+        _cell_name(PREFETCH, True)]
     section["headline"] = dict(
         baseline_syscalls_per_hop=base_r["syscalls_per_hop"],
         best_syscalls_per_hop=best_r["syscalls_per_hop"],
@@ -151,9 +179,78 @@ def bench_cold_path(m: int = C.DEFAULT_M) -> dict:
         / max(best_r["syscalls_per_hop_total"], 1e-9),
         qps_baseline=base_r["qps"], qps_best=best_r["qps"],
         identical_to_ref=all(
-            v[f"prefetch_{p}"]["identical_to_ref"]
-            for v in section["variants"].values() for p in (0, PREFETCH)),
+            v[_cell_name(pf, pl)]["identical_to_ref"]
+            for v in section["variants"].values() for pf, pl in COLD_CELLS),
         recall10=best_r["recall10"])
+    return section
+
+
+def bench_pipeline_overlap(m: int = C.DEFAULT_M) -> dict:
+    """The pipelined-traversal acceptance section: serial vs two-hop
+    in-flight runs on the relabeled layout at the 10 MB budget, cold cache
+    each.  Reports per-hop blocked wait (time inside demand fetches) and
+    compute, plus total storage I/O (demand + background) to show the
+    pipeline CONSERVES I/O while moving it off the critical path."""
+    base, q, gt = C.corpus()
+    paths = C.ensure_indices(ms=(m,), modes=("aisaq",), relabel=True)
+    path = paths[("aisaq", m)]
+    idx = HostIndex.load(path, cache_bytes=COLD_BUDGET)
+    ref_ids, _ = idx.search_batch_ref(q, K, L=L, w=W)
+    idx.close()
+    reps = 5
+    section: dict = {"budget": COLD_BUDGET, "prefetch_depth": PREFETCH,
+                     "relabel": True, "reps": reps, "runs": {}}
+    # blocked wait is thread-scheduling sensitive: one-shot cells flip
+    # sign run-to-run on a shared box.  Interleave the configs and take
+    # per-metric MEDIANS over `reps` cold runs each.
+    samples: dict = {name: [] for name in
+                     ("serial_no_prefetch", "serial_prefetch", "pipelined")}
+    cfg = dict(serial_no_prefetch=(0, False),
+               serial_prefetch=(PREFETCH, False),
+               pipelined=(PREFETCH, True))
+    for _ in range(reps):
+        for name, (pf, pl) in cfg.items():
+            idx = HostIndex.load(path, cache_bytes=COLD_BUDGET)  # cold cache
+            _, r = _run_phase(idx, q, ref_ids, gt, prefetch=pf, pipeline=pl)
+            c = idx.cache.counters
+            r["total_io_bytes"] = c.bytes_read + c.prefetch_bytes
+            samples[name].append(r)
+            idx.close()
+    for name, runs in samples.items():
+        med = dict(runs[-1])             # counters/flags from the last rep
+        for key in ("wall_s", "qps", "blocked_wait_per_hop_ms",
+                    "blocked_wait_s", "compute_s", "total_io_bytes"):
+            med[key] = float(np.median([r[key] for r in runs]))
+        med["identical_to_ref"] = all(r["identical_to_ref"] for r in runs)
+        section["runs"][name] = med
+    runs = section["runs"]
+    pl_r, s_r = runs["pipelined"], runs["serial_prefetch"]
+    s0_r = runs["serial_no_prefetch"]
+    # the acceptance comparison is KNOB-CONTROLLED: pipeline on vs off at
+    # equal prefetch — that isolates the two-hop in-flight discipline.
+    # The no-prefetch run is reported for context (on page-cache-backed
+    # dev boxes inline preadv is near-free, so prefetch itself trades
+    # wall time for demand-syscall elimination — the metric that models
+    # the real-SSD regime; see the cold_path section).
+    section["headline"] = dict(
+        blocked_wait_per_hop_ms_serial=s0_r["blocked_wait_per_hop_ms"],
+        blocked_wait_per_hop_ms_serial_prefetch=s_r
+        ["blocked_wait_per_hop_ms"],
+        blocked_wait_per_hop_ms_pipelined=pl_r["blocked_wait_per_hop_ms"],
+        blocked_wait_reduction_x=s_r["blocked_wait_per_hop_ms"]
+        / max(pl_r["blocked_wait_per_hop_ms"], 1e-9),
+        compute_s_pipelined=pl_r["compute_s"],
+        # conserved I/O: speculation may add wasted blocks but must stay
+        # in the same ballpark as the serial demand reads
+        total_io_bytes_serial=s0_r["total_io_bytes"],
+        total_io_bytes_serial_prefetch=s_r["total_io_bytes"],
+        total_io_bytes_pipelined=pl_r["total_io_bytes"],
+        io_overhead_x=pl_r["total_io_bytes"]
+        / max(s0_r["total_io_bytes"], 1),
+        identical_to_ref=all(r["identical_to_ref"]
+                             for r in runs.values()),
+        qps_serial=s0_r["qps"], qps_serial_prefetch=s_r["qps"],
+        qps_pipelined=pl_r["qps"])
     return section
 
 
@@ -192,16 +289,23 @@ def all_benchmarks():
                 f"_identical={wm['identical_to_ref']}"))
     report["cold_path"] = cold = bench_cold_path()
     for vname, v in cold["variants"].items():
-        for pf in (0, PREFETCH):
-            r = v[f"prefetch_{pf}"]
+        for pf, pl in COLD_CELLS:
+            r = v[_cell_name(pf, pl)]
             rows.append((
-                f"cold_{vname}_pf{pf}_syscalls_per_hop",
+                f"cold_{vname}_pf{pf}{'_pl' if pl else ''}_syscalls_per_hop",
                 r["syscalls_per_hop"],
                 f"qps={r['qps']:.0f}_pfhits={r['prefetch']['hits']}"
+                f"_blocked/hop={r['blocked_wait_per_hop_ms']:.3f}ms"
                 f"_identical={r['identical_to_ref']}"))
     rows.append(("cold_syscalls_per_hop_reduction",
                  cold["headline"]["reduction_x"],
                  f"identical={cold['headline']['identical_to_ref']}"))
+    report["pipeline_overlap"] = po = bench_pipeline_overlap()
+    rows.append(("pipeline_blocked_wait_reduction",
+                 po["headline"]["blocked_wait_reduction_x"],
+                 f"blocked/hop={po['headline']['blocked_wait_per_hop_ms_pipelined']:.3f}ms"
+                 f"_io_overhead={po['headline']['io_overhead_x']:.2f}x"
+                 f"_identical={po['headline']['identical_to_ref']}"))
     report["host_int8"] = h8 = bench_host_int8()
     rows.append(("host_int8_recall_gap", h8["recall_gap"],
                  f"int8_recall={h8['int8']['recall10']:.3f}"))
@@ -219,6 +323,11 @@ def all_benchmarks():
         ["baseline_syscalls_per_hop"],
         cold_syscalls_per_hop_best=cold["headline"]["best_syscalls_per_hop"],
         cold_syscalls_reduction_x=cold["headline"]["reduction_x"],
+        pipeline_blocked_wait_per_hop_ms=po["headline"]
+        ["blocked_wait_per_hop_ms_pipelined"],
+        pipeline_blocked_wait_reduction_x=po["headline"]
+        ["blocked_wait_reduction_x"],
+        pipeline_io_overhead_x=po["headline"]["io_overhead_x"],
         host_int8_recall_gap=h8["recall_gap"])
     dest = os.path.join(os.path.dirname(__file__), "..", "BENCH_search.json")
     with open(os.path.abspath(dest), "w") as f:
@@ -254,8 +363,10 @@ def quick_smoke() -> int:
                         relabel=relabel)
             idx = HostIndex.load(p)
             ref_ids, _ = idx.search_batch_ref(q, K, L=L, w=W)
-            for pf, adc in ((0, "f32"), (PREFETCH, "f32"), (0, "int8"),
-                            (PREFETCH, "int8")):
+            for pf, adc, pl in ((0, "f32", False), (PREFETCH, "f32", False),
+                                (0, "int8", False), (PREFETCH, "int8", False),
+                                (PREFETCH, "f32", True),
+                                (PREFETCH, "int8", True)):
                 if adc == "int8":
                     ref_ids_a, _ = idx.search_batch_ref(q, K, L=L, w=W,
                                                         adc_dtype=adc)
@@ -264,8 +375,8 @@ def quick_smoke() -> int:
                 idx.cache.wait_prefetch()
                 idx.cache.clear()
                 ids, _ = idx.search_batch(q, K, L=L, w=W, prefetch=pf,
-                                          adc_dtype=adc)
-                tag = f"relabel={relabel} pf={pf} adc={adc}"
+                                          adc_dtype=adc, pipeline=pl)
+                tag = f"relabel={relabel} pf={pf} adc={adc} pl={pl}"
                 if not np.array_equal(ids, ref_ids_a):
                     failures.append(f"{tag}: batched != scalar reference")
                 rec = recall_at(ids, gt, K)
@@ -282,6 +393,37 @@ def quick_smoke() -> int:
             if gap > 0.02:
                 failures.append(f"relabel={relabel}: int8 recall gap {gap}")
             idx.close()
+        # -- pipeline overlap guard (CI acceptance): cold-path mean latency
+        # of the pipelined engine must not regress past the serial path,
+        # and the blocked wait it exists to shrink must not grow.  Medians
+        # over alternating repeats + a noise margin keep this robust on
+        # shared CI runners (QPS noise), while still catching a real
+        # overlap regression (those show up as 2x+, not 20%).
+        p = os.path.join(td, "idx_rl1")
+        reps = 3
+        lat = {False: [], True: []}
+        blocked = {False: [], True: []}
+        for _ in range(reps):
+            for pl in (False, True):
+                idx = HostIndex.load(p)          # cold cache each run
+                t1 = time.perf_counter()
+                ids, st = idx.search_batch(q, K, L=L, w=W,
+                                           prefetch=PREFETCH, pipeline=pl)
+                lat[pl].append((time.perf_counter() - t1) / len(q))
+                blocked[pl].append(st[0].blocked_wait_s)
+                idx.close()
+        lat_s = float(np.median(lat[False]))
+        lat_p = float(np.median(lat[True]))
+        blk_s = float(np.median(blocked[False]))
+        blk_p = float(np.median(blocked[True]))
+        if lat_p > lat_s * 1.25 + 2e-3:
+            failures.append(
+                f"pipelined cold-path mean latency regressed: "
+                f"{lat_p*1e3:.2f}ms vs serial {lat_s*1e3:.2f}ms")
+        if blk_p > blk_s * 1.25 + 2e-3:
+            failures.append(
+                f"pipelined blocked wait regressed: {blk_p*1e3:.2f}ms "
+                f"vs serial {blk_s*1e3:.2f}ms")
     wall = time.perf_counter() - t0
     if failures:
         for msg in failures:

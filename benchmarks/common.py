@@ -4,11 +4,21 @@ The Vamana graph is built ONCE and shared across all PQ sizes and both
 placement modes (the paper does the same: same graph topology, different
 placement/compression), so the full Fig-3/Fig-4/Table-2/3/4 suite needs a
 single graph build.
+
+Staleness protection: every cached artifact (corpus, graph, each index
+dir) is stamped with a hash of the build parameters that produced it.  A
+knob change (N, R, pq_m, relabel, index format, ...) therefore REBUILDS
+the artifact instead of silently reusing a stale one — previously a
+surviving ``bench_idx/`` would keep serving indices built under old
+parameters.  ``benchmarks/run.py --rebuild`` force-clears the whole
+artifact cache.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import shutil
 import time
 
 import numpy as np
@@ -20,6 +30,55 @@ N, DIM, NQ = 20000, 96, 64
 R, BUILD_L = 24, 40
 PQ_MS = (12, 24, 48, 96)          # b_pq sweep for Fig. 4
 DEFAULT_M = 48
+PQ_ITERS = 8                      # codebook k-means iters (also stamped)
+
+# bump when write_index's on-disk layout changes: stamps embed it, so a
+# format change rebuilds every cached index
+FMT_VERSION = 1
+
+
+# -- build-params stamping ---------------------------------------------------
+
+
+def _params_hash(params: dict) -> str:
+    return hashlib.sha1(
+        json.dumps(params, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def _stamp_path(dirname: str, name: str) -> str:
+    return os.path.join(dirname, name)
+
+
+def _stamp_ok(dirname: str, name: str, params: dict) -> bool:
+    """True iff `dirname` carries a stamp built from exactly `params`."""
+    try:
+        with open(_stamp_path(dirname, name)) as f:
+            return json.load(f).get("hash") == _params_hash(params)
+    except (OSError, ValueError):
+        return False
+
+
+def _write_stamp(dirname: str, name: str, params: dict):
+    with open(_stamp_path(dirname, name), "w") as f:
+        json.dump({"hash": _params_hash(params), "params": params}, f,
+                  indent=1)
+
+
+def force_rebuild():
+    """Drop the whole cached corpus/graph/index family (run.py --rebuild)."""
+    shutil.rmtree(IDX, ignore_errors=True)
+
+
+def _corpus_params() -> dict:
+    return dict(n=N, dim=DIM, nq=NQ, n_clusters=96, seed=0, qseed=1, gt_k=10)
+
+
+def _graph_params() -> dict:
+    return dict(corpus=_params_hash(_corpus_params()), R=R, build_L=BUILD_L,
+                seed=0, two_pass=False)
+
+
+# -- cached artifacts --------------------------------------------------------
 
 
 def corpus():
@@ -27,26 +86,30 @@ def corpus():
     os.makedirs(IDX, exist_ok=True)
     fb, fq, fg = (os.path.join(IDX, x) for x in
                   ("base.npy", "queries.npy", "gt.npy"))
-    if os.path.exists(fb):
+    params = _corpus_params()
+    if os.path.exists(fb) and _stamp_ok(IDX, "corpus.stamp.json", params):
         return np.load(fb), np.load(fq), np.load(fg)
     base = make_clustered(N, DIM, n_clusters=96, seed=0)
     q = make_queries(NQ, base, seed=1)
     from repro.core import pq
     gt = pq.groundtruth(q, base, 10)
     np.save(fb, base), np.save(fq, q), np.save(fg, gt)
+    _write_stamp(IDX, "corpus.stamp.json", params)
     return base, q, gt
 
 
 def graph(base):
     from repro.core.vamana import build_vamana
     fg = os.path.join(IDX, "graph.npy")
-    if os.path.exists(fg):
+    params = _graph_params()
+    if os.path.exists(fg) and _stamp_ok(IDX, "graph.stamp.json", params):
         return np.load(fg)
     t0 = time.time()
     g = build_vamana(base, R=R, L=BUILD_L, seed=0, two_pass=False,
                      log_every=4000)
     print(f"[bench] vamana build {time.time()-t0:.0f}s")
     np.save(fg, g)
+    _write_stamp(IDX, "graph.stamp.json", params)
     return g
 
 
@@ -61,6 +124,10 @@ def ensure_indices(ms=(DEFAULT_M,), modes=("aisaq", "diskann"),
     `relabel=True` builds the graph-locality-relabeled twins (same graph,
     same codes, permuted placement) into separate `*_rl` directories so
     the cold-path benchmark can compare the two layouts directly.
+
+    Each index dir is stamped with its build params (`build_params.json`);
+    a stamp mismatch — knob change, format bump, upstream corpus/graph
+    rebuild — removes and rebuilds that directory.
     """
     import jax
     from repro.core import pq
@@ -73,16 +140,22 @@ def ensure_indices(ms=(DEFAULT_M,), modes=("aisaq", "diskann"),
         for mode in modes:
             p = index_path(mode, m, relabel)
             paths[(mode, m)] = p
-            if os.path.exists(os.path.join(p, "meta.json")):
+            params = dict(fmt=FMT_VERSION, graph=_params_hash(
+                _graph_params()), mode=mode, m=m, relabel=bool(relabel),
+                metric="l2", pq_iters=PQ_ITERS, pq_seed=m)
+            if os.path.exists(os.path.join(p, "meta.json")) \
+                    and _stamp_ok(p, "build_params.json", params):
                 continue
+            shutil.rmtree(p, ignore_errors=True)     # stale or absent
             if "cents" not in cache:
                 cb = pq.train_codebooks(jax.random.PRNGKey(m), base, m=m,
-                                        iters=8)
+                                        iters=PQ_ITERS)
                 cache["cents"] = np.asarray(cb.centroids)
                 cache["codes"] = np.asarray(pq.encode(cb, base))
             write_index(p, vectors=base, graph=g, centroids=cache["cents"],
                         codes=cache["codes"], metric="l2", mode=mode,
                         relabel=relabel)
+            _write_stamp(p, "build_params.json", params)
     return paths
 
 
@@ -93,7 +166,7 @@ def ensure_subcorpora(n_sub=5, m=DEFAULT_M):
     from repro.configs.base import IndexConfig
     from repro.core.build import build_index
     base, _, _ = corpus()
-    cb = pq.train_codebooks(jax.random.PRNGKey(m), base, m=m, iters=8)
+    cb = pq.train_codebooks(jax.random.PRNGKey(m), base, m=m, iters=PQ_ITERS)
     cents = np.asarray(cb.centroids)
     sub_n = 2000
     cfg = IndexConfig(name="sub", n_vectors=sub_n, dim=DIM, R=16, pq_m=m,
@@ -102,9 +175,17 @@ def ensure_subcorpora(n_sub=5, m=DEFAULT_M):
     for i in range(n_sub):
         p = os.path.join(IDX, f"sub_{i}")
         paths[f"sub{i}"] = p
-        if not os.path.exists(os.path.join(p, "meta.json")):
-            build_index(p, base[i * sub_n:(i + 1) * sub_n], cfg,
-                        mode="aisaq", shared_centroids=cents)
+        # derived from cfg, not re-typed: a knob edit must change the hash
+        params = dict(fmt=FMT_VERSION, corpus=_params_hash(_corpus_params()),
+                      m=m, sub_n=sub_n, i=i, R=cfg.R, build_L=cfg.build_L,
+                      pq_iters=PQ_ITERS)
+        if os.path.exists(os.path.join(p, "meta.json")) \
+                and _stamp_ok(p, "build_params.json", params):
+            continue
+        shutil.rmtree(p, ignore_errors=True)
+        build_index(p, base[i * sub_n:(i + 1) * sub_n], cfg,
+                    mode="aisaq", shared_centroids=cents)
+        _write_stamp(p, "build_params.json", params)
     return paths
 
 

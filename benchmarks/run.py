@@ -8,7 +8,14 @@ def main(argv=None) -> None:
     ap.add_argument("--only", choices=["paper", "device", "search",
                                        "serving"],
                     default=None)
+    ap.add_argument("--rebuild", action="store_true",
+                    help="drop the cached corpus/graph/index artifacts and "
+                         "rebuild from scratch (stamps normally rebuild "
+                         "only on a build-params mismatch)")
     args = ap.parse_args(argv)
+    if args.rebuild:
+        from benchmarks import common
+        common.force_rebuild()
     rows = []
     if args.only in (None, "paper"):
         from benchmarks.bench_paper import all_benchmarks as paper

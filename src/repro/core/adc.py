@@ -1,0 +1,98 @@
+"""Host-side PQ LUT / ADC numerics (numpy twins of the device kernels).
+
+This is the numerics layer of the three-layer host search core
+(``core.adc`` -> ``core.traversal`` -> ``core.index_io``): pure functions
+over numpy arrays, no file or cache state, kept jax-free so the
+storage-backed backend never pays jit costs.  The int8 twins mirror the
+device quantized-LUT path (``kernels.chunk_adc.quantize_lut``) — a parity
+test pins the two implementations together.
+
+Every symbol here is re-exported from ``repro.core.index_io`` for
+backwards compatibility with pre-split imports.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def np_build_lut(centroids: np.ndarray, q: np.ndarray, metric: str) -> np.ndarray:
+    """centroids (m, ks, dsub), q (d,) -> (m, ks) f32 LUT."""
+    m, ks, dsub = centroids.shape
+    qs = q.astype(np.float32).reshape(m, 1, dsub)
+    if metric == "mips":
+        return -np.einsum("mkd,mxd->mk", centroids, qs)
+    diff = centroids - qs
+    return np.einsum("mkd,mkd->mk", diff, diff)
+
+
+def np_build_lut_batch(centroids: np.ndarray, Q: np.ndarray,
+                       metric: str) -> np.ndarray:
+    """centroids (m, ks, dsub), Q (nq, d) -> (nq, m, ks) f32 LUTs."""
+    m, ks, dsub = centroids.shape
+    qs = Q.astype(np.float32).reshape(Q.shape[0], m, 1, dsub)
+    if metric == "mips":
+        return -np.einsum("mkd,qmxd->qmk", centroids, qs)
+    diff = centroids[None] - qs
+    return np.einsum("qmkd,qmkd->qmk", diff, diff)
+
+
+def np_adc(lut: np.ndarray, codes: np.ndarray) -> np.ndarray:
+    """lut (m, ks), codes (..., m) -> (...,) f32."""
+    m = lut.shape[0]
+    return lut[np.arange(m), codes.astype(np.int64)].sum(axis=-1)
+
+
+def np_quantize_lut(lut: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """numpy twin of ``kernels.chunk_adc.quantize_lut`` — the SAME recipe
+    (symmetric per-query int8, scale = max|lut|, dequant = q8 * scale/127),
+    kept jax-free so the host backend never pays jit costs. A parity test
+    pins the two implementations together.
+
+    lut (..., m, ks) f32 -> (lut_q8 (..., m, ks) int8, scale (...,) f32).
+    """
+    lut = np.asarray(lut, dtype=np.float32)
+    scale = np.abs(lut).max(axis=(-2, -1))
+    lut_q8 = np.clip(np.round(
+        lut / np.maximum(scale[..., None, None], np.float32(1e-20))
+        * np.float32(127.0)), -127, 127).astype(np.int8)
+    return lut_q8, scale.astype(np.float32)
+
+
+def np_adc_int8(lut_q8: np.ndarray, scale: np.ndarray,
+                codes: np.ndarray) -> np.ndarray:
+    """Host int8 ADC over a quantized LUT.
+
+    lut_q8 (m, ks) int8, codes (..., m) -> (...,) f32. A scalar `scale`
+    reproduces the device int8 fused-hop numerics exactly (int32
+    accumulation + ONE rescale — what the MXU one-hot contraction needs);
+    a per-subspace (m,) `scale` is the finer host granularity (gathers on
+    the host aren't tied to a single-scale contraction).
+    """
+    m = lut_q8.shape[0]
+    g = lut_q8[np.arange(m), codes.astype(np.int64)]
+    scale = np.asarray(scale, dtype=np.float32)
+    if scale.ndim == 0:
+        return g.astype(np.int32).sum(axis=-1).astype(np.float32) \
+            * (scale * np.float32(1 / 127))
+    return (g.astype(np.float32) * (scale * np.float32(1 / 127))).sum(axis=-1)
+
+
+def np_host_lut_int8(lut: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """The host search path's int8 LUT: per-(query, subspace) mid-centered
+    symmetric quantization through the SAME clip/round recipe as the
+    device ``quantize_lut`` (np_quantize_lut applied per subspace row).
+
+    Range-reduction (subtract the per-subspace minimum, center on the
+    half-range) shifts every ADC distance of a query by one constant —
+    ranking-invariant, so beam search is unaffected — while shrinking the
+    quantization step from max|lut|/127 to (subspace range)/254.
+
+    lut (..., m, ks) f32 -> (lut_q8 (..., m, ks) int8, scale (..., m) f32).
+    """
+    lut = np.asarray(lut, dtype=np.float32)
+    res = lut - lut.min(axis=-1, keepdims=True)
+    mid = res - res.max(axis=-1, keepdims=True) * np.float32(0.5)
+    q8, scale = np_quantize_lut(mid[..., None, :])
+    return q8[..., 0, :], scale

@@ -38,11 +38,14 @@ import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from queue import Queue
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple, Union
 
 import numpy as np
 
 _PENDING_WAIT_S = 0.5       # bound on waiting for an in-flight prefetch
+_AUTO_GAP_MAX = 8           # largest gap "auto" will ever pick
+_AUTO_GAP_MIN_OBS = 8       # holes observed before "auto" trusts the data
+_GAP_HIST_MAX = 64          # holes larger than this aren't coalescible
 
 
 @dataclass
@@ -58,12 +61,15 @@ class CacheCounters:
     prefetch_bytes: int = 0      # bytes read off the demand path
     prefetch_hits: int = 0       # speculative blocks a demand fetch consumed
     prefetch_wasted: int = 0     # speculative blocks dropped unused
+    prefetch_errors: int = 0     # background read batches that raised
+    auto_gap: int = 0            # last gap chosen by fetch(gap="auto")
 
     def snapshot(self) -> Tuple[int, ...]:
         return (self.hits, self.misses, self.evictions, self.syscalls,
                 self.bytes_read, self.fetch_calls, self.prefetch_issued,
                 self.prefetch_syscalls, self.prefetch_bytes,
-                self.prefetch_hits, self.prefetch_wasted)
+                self.prefetch_hits, self.prefetch_wasted,
+                self.prefetch_errors, self.auto_gap)
 
     def reset(self):
         """Zero every counter in place (phase boundaries in benchmarks)."""
@@ -88,11 +94,24 @@ class BlockCache:
         self.max_entries = self.capacity_bytes // self.io_bytes
         self._blocks: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.counters = CacheCounters()
+        # demand-miss run structure, recorded on every fetch regardless of
+        # the gap in use: lengths of contiguous miss runs and the hole
+        # sizes separating consecutive runs (both in blocks).  gap="auto"
+        # picks its coalescing gap from the hole distribution.
+        self.miss_run_hist: Dict[int, int] = {}
+        self.miss_gap_hist: Dict[int, int] = {}
         self._cond = threading.Condition()
         self._prefetched: Set[int] = set()   # resident but not yet demanded
         self._inflight: Set[int] = set()     # queued for background read
         self._pf_queue: Optional[Queue] = None
         self._pf_thread: Optional[threading.Thread] = None
+        # invalidation epoch: bumped by invalidate()/clear().  A reader
+        # snapshots it BEFORE its preadv and only inserts speculative
+        # (hole) buffers if it is unchanged at landing time — hole blocks
+        # have no _inflight claim token to cancel, so without this a
+        # buffer read before an in-place chunk write could land stale
+        # data in the cache after the write invalidated the range.
+        self._epoch = 0
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -112,6 +131,7 @@ class BlockCache:
             self._prefetched.clear()
             self._inflight.clear()           # in-flight reads land nowhere
             self._blocks.clear()
+            self._epoch += 1                 # in-flight buffers are stale
             self._cond.notify_all()
 
     def invalidate(self, start: int, nbytes: int):
@@ -133,42 +153,92 @@ class BlockCache:
                 if off in self._prefetched:
                     self._prefetched.discard(off)
                     self.counters.prefetch_wasted += 1
+            self._epoch += 1     # buffers read before this must not land
             self._cond.notify_all()
 
     # -- coalesced preadv ----------------------------------------------------
+    def _iter_read_runs(self, offs: np.ndarray, gap: int):
+        """Segment sorted unique block offsets into coalesced runs (runs
+        separated by <= `gap` absent blocks are merged and the hole blocks
+        read along) and yield, per ONE-preadv run:
+        ({off: buf} for every block of the run, asked-offset set, bytes).
+        The single copy of the run-segmentation algorithm — both the
+        demand path (_read_runs) and the incremental background reader
+        (_pf_read) drive it."""
+        io = self.io_bytes
+        span = (max(0, int(gap)) + 1) * io
+        run_start = 0
+        for i in range(1, offs.size + 1):
+            if i < offs.size and offs[i] - offs[i - 1] <= span:
+                continue
+            lo, hi = int(offs[run_start]), int(offs[i - 1])
+            nblk = (hi - lo) // io + 1
+            bufs = [np.empty(io, np.uint8) for _ in range(nblk)]
+            got = os.preadv(self.fd, bufs, lo)
+            yield ({lo + j * io: bufs[j] for j in range(nblk)},
+                   set(offs[run_start:i].tolist()), int(got))
+            run_start = i
+
     def _read_runs(self, offs: np.ndarray, gap: int
                    ) -> Tuple[Dict[int, np.ndarray], Dict[int, np.ndarray],
                               int, int]:
-        """preadv over sorted unique block offsets, one call per run. Runs
-        separated by <= `gap` absent blocks are merged; the hole blocks are
-        read along and returned separately (readahead). Returns
-        (wanted off->buf, holes off->buf, syscalls, bytes)."""
-        io = self.io_bytes
+        """preadv over sorted unique block offsets, one call per run.
+        Returns (wanted off->buf, holes off->buf, syscalls, bytes)."""
         want: Dict[int, np.ndarray] = {}
         holes: Dict[int, np.ndarray] = {}
         n_sys = 0
         nbytes = 0
-        if not offs.size:
-            return want, holes, n_sys, nbytes
-        span = (gap + 1) * io
-        run_start = 0
-        for i in range(1, offs.size + 1):
-            if i == offs.size or offs[i] - offs[i - 1] > span:
-                lo, hi = int(offs[run_start]), int(offs[i - 1])
-                nblk = (hi - lo) // io + 1
-                bufs = [np.empty(io, np.uint8) for _ in range(nblk)]
-                got = os.preadv(self.fd, bufs, lo)
-                n_sys += 1
-                nbytes += int(got)
-                asked = set(offs[run_start:i].tolist())
-                for j in range(nblk):
-                    o = lo + j * io
-                    (want if o in asked else holes)[o] = bufs[j]
-                run_start = i
+        for blocks, asked, got in self._iter_read_runs(offs, gap):
+            n_sys += 1
+            nbytes += got
+            for o, buf in blocks.items():
+                (want if o in asked else holes)[o] = buf
         return want, holes, n_sys, nbytes
 
+    # -- readahead gap autotuning -------------------------------------------
+    def _record_miss_runs(self, offs: np.ndarray):
+        """Fold one fetch's sorted unique demand-miss offsets into the
+        run-length / hole-size histograms (caller holds self._cond)."""
+        if offs.size == 0:
+            return
+        steps = np.diff(offs) // self.io_bytes
+        run = 1
+        for step in steps.tolist():
+            if step == 1:
+                run += 1
+                continue
+            self.miss_run_hist[run] = self.miss_run_hist.get(run, 0) + 1
+            hole = int(step) - 1
+            if hole <= _GAP_HIST_MAX:
+                self.miss_gap_hist[hole] = \
+                    self.miss_gap_hist.get(hole, 0) + 1
+            run = 1
+        self.miss_run_hist[run] = self.miss_run_hist.get(run, 0) + 1
+
+    def auto_gap(self) -> int:
+        """Coalescing gap chosen from the observed demand-miss structure:
+        the MEDIAN hole between consecutive miss runs, clamped to
+        [0, _AUTO_GAP_MAX].  Rationale: merging a hole of g blocks costs g
+        extra block reads but saves one syscall, so holes at or below the
+        typical (median) size — the ones a graph-locality layout produces
+        in bulk — are worth reading through, while a median beyond the
+        clamp means the misses are genuinely scattered and coalescing
+        would mostly read garbage (returns 0).  Needs
+        ``_AUTO_GAP_MIN_OBS`` observed holes before trusting the data."""
+        with self._cond:
+            obs = sorted(self.miss_gap_hist.items())
+        total = sum(c for _, c in obs)
+        if total < _AUTO_GAP_MIN_OBS:
+            return 0
+        cum = 0
+        for g, cnt in obs:
+            cum += cnt
+            if 2 * cum >= total:
+                return g if g <= _AUTO_GAP_MAX else 0
+        return 0
+
     # -- the batched demand fetch -------------------------------------------
-    def fetch(self, offsets: np.ndarray, gap: int = 0,
+    def fetch(self, offsets: np.ndarray, gap: Union[int, str] = 0,
               ) -> Tuple[np.ndarray, np.ndarray, int]:
         """Fetch the I/O units starting at `offsets` (block-aligned, may
         repeat). Returns (data (B, io_bytes) uint8, hit mask over the
@@ -177,7 +247,9 @@ class BlockCache:
         A unique offset counts as a hit when it was served without demand
         I/O — resident, or landed by an in-flight background prefetch this
         fetch waited on. `gap` > 0 enables readahead coalescing of the
-        miss runs (see class docstring)."""
+        miss runs (see class docstring); `gap="auto"` picks the gap from
+        the demand-miss histograms (`auto_gap`) and reports the choice in
+        ``counters.auto_gap``."""
         offsets = np.asarray(offsets, dtype=np.int64)
         c = self.counters
         c.fetch_calls += 1
@@ -201,6 +273,16 @@ class BlockCache:
                     pending.append(o)        # background read is coming
                 else:
                     miss.append(o)
+            # histogram over EVERY demanded non-resident block (pending
+            # included): under the pipelined path most frontier blocks are
+            # in flight at demand time, and recording only the leftovers
+            # would teach gap="auto" from a biased scatter sample
+            self._record_miss_runs(
+                np.asarray(sorted(miss + pending), dtype=np.int64))
+            epoch0 = self._epoch
+        if gap == "auto":
+            gap = self.auto_gap()
+            c.auto_gap = gap
         want, holes, n_sys, nbytes = self._read_runs(
             np.asarray(sorted(miss), dtype=np.int64), gap)
         local.update(want)
@@ -248,12 +330,18 @@ class BlockCache:
         for i, off in enumerate(offsets.tolist()):
             out[i] = local[off]
         with self._cond:
+            # epoch gate: if invalidate()/clear() ran while our buffers
+            # were in flight, they may hold pre-write bytes — return them
+            # to the caller (it demanded the pre-write view) but never
+            # RETAIN them past the invalidation
+            fresh = self._epoch == epoch0
             for off in miss:
                 self._inflight.discard(off)  # demand read beat the prefetch
-                self._insert(off, local[off])
+                if fresh:
+                    self._insert(off, local[off])
             # readahead holes: speculative insert (skipped entirely under
             # zero retention — an unretainable block is not speculation)
-            if self.max_entries:
+            if self.max_entries and fresh:
                 for off, buf in holes.items():
                     # the demand read covered it: cancel any queued
                     # background read so storage sees each block once
@@ -265,16 +353,26 @@ class BlockCache:
         return out, hit_mask, n_sys
 
     # -- async prefetch ------------------------------------------------------
-    def prefetch_async(self, offsets: np.ndarray) -> int:
+    def prefetch_async(self, offsets: np.ndarray,
+                       gap: Union[int, str] = 0) -> int:
         """Queue speculative background reads of block-aligned `offsets`.
 
         Already-resident and already-queued blocks are skipped; returns the
         number of blocks actually queued. No-op when retention is disabled
         (a zero-budget cache could never serve the prefetched block) and
         when a backlog of unprocessed batches exists (stale speculation is
-        worse than none: it evicts useful residents)."""
+        worse than none: it evicts useful residents).
+
+        `gap` gives the background reader the same run-coalescing the
+        demand path enjoys ("auto" resolves through `auto_gap`): fewer,
+        larger preadv calls shrink the worker's time-to-land — which is
+        exactly what a demand fetch waiting on an in-flight block pays."""
         if self.max_entries == 0:
             return 0
+        if gap == "auto":
+            gap = self.auto_gap()
+            self.counters.auto_gap = gap
+        gap = max(0, int(gap))
         if self._pf_queue is not None and self._pf_queue.qsize() > 2:
             return 0
         offsets = np.unique(np.asarray(offsets, dtype=np.int64))
@@ -285,7 +383,9 @@ class BlockCache:
         if not todo:
             return 0
         self._ensure_worker()
-        self._pf_queue.put(np.asarray(todo, dtype=np.int64))
+        # the gap travels WITH the batch: queued batches keep the knob
+        # their caller set (no shared mutable state to race on)
+        self._pf_queue.put((np.asarray(todo, dtype=np.int64), gap))
         return len(todo)
 
     def wait_prefetch(self):
@@ -315,34 +415,62 @@ class BlockCache:
     def _pf_loop(self):
         q = self._pf_queue
         while True:
-            batch = q.get()
-            if batch is None:
+            item = q.get()
+            if item is None:
                 q.task_done()
                 return
+            batch, gap = item
             try:
-                self._pf_read(batch)
+                self._pf_read(batch, gap)
+            except Exception:       # noqa: BLE001 — a failing background
+                # read must DEGRADE the pipeline, never deadlock it:
+                # un-claim the batch so demand fetches stop waiting on
+                # blocks that will never land and read them directly
+                with self._cond:
+                    self.counters.prefetch_errors += 1
+                    for o in batch.tolist():
+                        self._inflight.discard(int(o))
+                    self._cond.notify_all()
             finally:
                 q.task_done()
 
-    def _pf_read(self, batch: np.ndarray):
+    def _pf_read(self, batch: np.ndarray, gap: int = 0):
+        """Read one queued batch and land it INCREMENTALLY, run by run: a
+        demand fetch waiting on an in-flight block wakes as soon as that
+        block's run is read, not after the whole batch — the wait a
+        pipelined traversal pays is one coalesced preadv, not ~a hop's
+        worth of them."""
         with self._cond:                     # drop cancelled offsets cheaply
             offs = np.asarray(sorted(int(o) for o in batch.tolist()
                                      if o in self._inflight), dtype=np.int64)
-        bufs, _, n_sys, nbytes = self._read_runs(offs, 0)
-        with self._cond:
-            c = self.counters
-            c.prefetch_syscalls += n_sys
-            c.prefetch_bytes += nbytes
-            for off, buf in bufs.items():
-                if off not in self._inflight:
-                    continue                 # invalidated/cleared mid-flight
-                self._inflight.discard(off)
-                if off in self._blocks:
-                    continue                 # a demand read got there first
-                c.prefetch_issued += 1
-                self._prefetched.add(off)
-                self._insert(off, buf)
-            self._cond.notify_all()          # wake demand fetches waiting
+            epoch0 = self._epoch
+        if not offs.size:
+            return
+        for blocks, asked, got in self._iter_read_runs(offs, gap):
+            with self._cond:
+                c = self.counters
+                c.prefetch_syscalls += 1
+                c.prefetch_bytes += got
+                # asked blocks carry an _inflight claim that invalidate()
+                # cancels; HOLE blocks have no claim token, so they are
+                # gated on the invalidation epoch instead — a hole buffer
+                # read before an in-place write must never land after it
+                fresh = self._epoch == epoch0
+                epoch0 = self._epoch   # next run's preadv starts after this
+                for o, buf in blocks.items():
+                    if o in asked:
+                        if o not in self._inflight:
+                            continue         # invalidated/cleared mid-flight
+                        self._inflight.discard(o)
+                        if o in self._blocks:
+                            continue         # a demand read got there first
+                    elif not fresh or o in self._blocks \
+                            or o in self._inflight:
+                        continue             # stale/resident/claimed hole
+                    c.prefetch_issued += 1
+                    self._prefetched.add(o)
+                    self._insert(o, buf)
+                self._cond.notify_all()      # wake demand fetches waiting
 
     # -- LRU internals (caller holds self._cond) -----------------------------
     def _insert(self, off: int, buf: np.ndarray):

@@ -23,8 +23,11 @@ from typing import Callable, Optional, Set
 
 import numpy as np
 
+from repro.core.adc import np_adc, np_build_lut  # noqa: F401  (public
+# surface of this module since the monolith era; kept through the split)
 from repro.core.chunk_layout import B_NUM
-from repro.core.index_io import HostIndex, SearchStats, np_adc, np_build_lut
+from repro.core.index_io import HostIndex
+from repro.core.traversal import SearchStats  # noqa: F401
 
 
 class DynamicHostIndex(HostIndex):

@@ -1,4 +1,17 @@
-"""On-disk index format + the host (storage-backed) search backend.
+"""On-disk index format + the host (storage-backed) index lifecycle.
+
+This is the storage layer of the three-layer host search core:
+
+  ``core.adc``        LUT/ADC numerics (numpy twins of the device kernels)
+  ``core.traversal``  the beam-search engine (frontier selection, candidate
+                      bookkeeping, rerank tail, SearchStats, pipelining)
+  ``core.index_io``   THIS module — on-disk format, ``HostIndex`` lifecycle
+                      (fd + block cache + residency accounting); search
+                      methods delegate to the engine
+
+For backwards compatibility every pre-split public symbol (``np_*``,
+``SearchStats``, ``recall_at``) is re-exported here — external users of
+the old monolith keep working.
 
 This is the *faithful reproduction* path: real files, real ``os.pread`` per
 node expansion, real resident-set accounting. Directory format:
@@ -18,99 +31,24 @@ from __future__ import annotations
 import json
 import os
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import numpy as np
 
+# compat re-exports: the pre-split monolith exposed these names here ------
+from repro.core.adc import (np_adc, np_adc_int8, np_build_lut,  # noqa: F401
+                            np_build_lut_batch, np_host_lut_int8,
+                            np_quantize_lut)
 from repro.core.block_cache import BlockCache
-from repro.core.chunk_layout import B_NUM, ChunkLayout, pack_chunks_file, parse_chunk
+from repro.core.chunk_layout import ChunkLayout, pack_chunks_file
+from repro.core import traversal as _traversal
+from repro.core.traversal import SearchStats, recall_at  # noqa: F401
 
-
-# ---------------------------------------------------------------------------
-# numpy twins of pq.build_lut / pq.adc (host backend must not pay jit costs)
-# ---------------------------------------------------------------------------
-
-
-def np_build_lut(centroids: np.ndarray, q: np.ndarray, metric: str) -> np.ndarray:
-    """centroids (m, ks, dsub), q (d,) -> (m, ks) f32 LUT."""
-    m, ks, dsub = centroids.shape
-    qs = q.astype(np.float32).reshape(m, 1, dsub)
-    if metric == "mips":
-        return -np.einsum("mkd,mxd->mk", centroids, qs)
-    diff = centroids - qs
-    return np.einsum("mkd,mkd->mk", diff, diff)
-
-
-def np_build_lut_batch(centroids: np.ndarray, Q: np.ndarray,
-                       metric: str) -> np.ndarray:
-    """centroids (m, ks, dsub), Q (nq, d) -> (nq, m, ks) f32 LUTs."""
-    m, ks, dsub = centroids.shape
-    qs = Q.astype(np.float32).reshape(Q.shape[0], m, 1, dsub)
-    if metric == "mips":
-        return -np.einsum("mkd,qmxd->qmk", centroids, qs)
-    diff = centroids[None] - qs
-    return np.einsum("qmkd,qmkd->qmk", diff, diff)
-
-
-def np_adc(lut: np.ndarray, codes: np.ndarray) -> np.ndarray:
-    """lut (m, ks), codes (..., m) -> (...,) f32."""
-    m = lut.shape[0]
-    return lut[np.arange(m), codes.astype(np.int64)].sum(axis=-1)
-
-
-def np_quantize_lut(lut: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """numpy twin of ``kernels.chunk_adc.quantize_lut`` — the SAME recipe
-    (symmetric per-query int8, scale = max|lut|, dequant = q8 * scale/127),
-    kept jax-free so the host backend never pays jit costs. A parity test
-    pins the two implementations together.
-
-    lut (..., m, ks) f32 -> (lut_q8 (..., m, ks) int8, scale (...,) f32).
-    """
-    lut = np.asarray(lut, dtype=np.float32)
-    scale = np.abs(lut).max(axis=(-2, -1))
-    lut_q8 = np.clip(np.round(
-        lut / np.maximum(scale[..., None, None], np.float32(1e-20))
-        * np.float32(127.0)), -127, 127).astype(np.int8)
-    return lut_q8, scale.astype(np.float32)
-
-
-def np_adc_int8(lut_q8: np.ndarray, scale: np.ndarray,
-                codes: np.ndarray) -> np.ndarray:
-    """Host int8 ADC over a quantized LUT.
-
-    lut_q8 (m, ks) int8, codes (..., m) -> (...,) f32. A scalar `scale`
-    reproduces the device int8 fused-hop numerics exactly (int32
-    accumulation + ONE rescale — what the MXU one-hot contraction needs);
-    a per-subspace (m,) `scale` is the finer host granularity (gathers on
-    the host aren't tied to a single-scale contraction).
-    """
-    m = lut_q8.shape[0]
-    g = lut_q8[np.arange(m), codes.astype(np.int64)]
-    scale = np.asarray(scale, dtype=np.float32)
-    if scale.ndim == 0:
-        return g.astype(np.int32).sum(axis=-1).astype(np.float32) \
-            * (scale * np.float32(1 / 127))
-    return (g.astype(np.float32) * (scale * np.float32(1 / 127))).sum(axis=-1)
-
-
-def np_host_lut_int8(lut: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """The host search path's int8 LUT: per-(query, subspace) mid-centered
-    symmetric quantization through the SAME clip/round recipe as the
-    device ``quantize_lut`` (np_quantize_lut applied per subspace row).
-
-    Range-reduction (subtract the per-subspace minimum, center on the
-    half-range) shifts every ADC distance of a query by one constant —
-    ranking-invariant, so beam search is unaffected — while shrinking the
-    quantization step from max|lut|/127 to (subspace range)/254.
-
-    lut (..., m, ks) f32 -> (lut_q8 (..., m, ks) int8, scale (..., m) f32).
-    """
-    lut = np.asarray(lut, dtype=np.float32)
-    res = lut - lut.min(axis=-1, keepdims=True)
-    mid = res - res.max(axis=-1, keepdims=True) * np.float32(0.5)
-    q8, scale = np_quantize_lut(mid[..., None, :])
-    return q8[..., 0, :], scale
+__all__ = [
+    "write_index", "HostIndex", "SearchStats", "recall_at",
+    "np_build_lut", "np_build_lut_batch", "np_adc", "np_quantize_lut",
+    "np_adc_int8", "np_host_lut_int8",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -178,26 +116,8 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# host search backend
+# host index lifecycle (search delegates to core.traversal)
 # ---------------------------------------------------------------------------
-
-
-@dataclass
-class SearchStats:
-    hops: int = 0
-    ios: int = 0            # logical chunk reads (cache hit or miss)
-    bytes_read: int = 0     # bytes actually pulled from storage
-    pq_dists: int = 0
-    latency_s: float = 0.0
-    syscalls: int = 0       # batched preadv calls issued for this query
-    cache_hits: int = 0
-    cache_misses: int = 0
-    # speculative next-hop prefetch accounting (whole-batch deltas, folded
-    # into the batch's lead query like syscall attribution)
-    prefetch_issued: int = 0    # blocks landed by the background thread
-    prefetch_hits: int = 0      # prefetched blocks a demand fetch consumed
-    prefetch_wasted: int = 0    # prefetched blocks dropped unused
-    rerank_ios: int = 0     # chunk reads issued by the exact rerank tier
 
 
 class HostIndex:
@@ -304,112 +224,6 @@ class HostIndex:
         inner = off - blk_start
         return np.frombuffer(raw, dtype=np.uint8)[inner:inner + lay.chunk_bytes]
 
-    # -- Algorithm 1 (faithful scalar reference) -----------------------------
-    def search_ref(self, q: np.ndarray, k: int, L: int, w: int = 4, *,
-                   adc_dtype: str = "f32", rerank: Optional[int] = None
-                   ) -> Tuple[np.ndarray, SearchStats]:
-        """Scalar DiskANN beam search (paper Algorithm 1), one pread per
-        node expansion. Kept as the semantics oracle for the vectorized
-        hot path — `search` must return bit-identical ids (per adc_dtype:
-        the int8 oracle pins the int8 hot path).
-
-        ``rerank`` selects the result tier (see `search_batch`): None is
-        the traversal pool, 0 is PQ-only, r > 0 the exact rerank tier."""
-        assert adc_dtype in ("f32", "int8"), adc_dtype
-        t0 = time.perf_counter()
-        q = np.asarray(q, dtype=np.float32)   # same arithmetic as `search`
-        stats = SearchStats()
-        lay = self.layout
-        metric = self.meta["metric"]
-        lut = np_build_lut(self.centroids, q.astype(np.float32), metric)
-        if adc_dtype == "int8":
-            lut_q8, scale = np_host_lut_int8(lut)
-            adc = lambda codes: np_adc_int8(lut_q8, scale, codes)  # noqa: E731
-        else:
-            adc = lambda codes: np_adc(lut, codes)                 # noqa: E731
-        eps = np.asarray(self.meta["entry_points"], dtype=np.int64)
-        # candidate list: ids, pq-dists, expanded?
-        cand_ids = eps.copy()
-        cand_d = adc(self.ep_codes)                          # entry codes: RAM
-        stats.pq_dists += len(eps)
-        expanded: Dict[int, float] = {}                      # id -> exact dist
-        inserted = set(int(e) for e in eps)
-        while True:
-            order = np.argsort(cand_d, kind="stable")[:L]
-            cand_ids, cand_d = cand_ids[order], cand_d[order]
-            frontier = [int(i) for i in cand_ids if int(i) not in expanded][:w]
-            if not frontier:
-                break
-            stats.hops += 1
-            new_ids: List[np.ndarray] = []
-            new_d: List[np.ndarray] = []
-            for p in frontier:
-                raw = self._read_chunk(p, stats)
-                vec, ids, inline_codes = parse_chunk(raw, lay)
-                # full-precision distance from the chunk (re-rank pool V)
-                vf = vec.astype(np.float32)
-                if metric == "mips":
-                    expanded[p] = float(-(vf @ q))
-                else:
-                    expanded[p] = float(((vf - q) ** 2).sum())
-                valid = ids >= 0
-                ids = ids[valid]
-                fresh = np.array([i for i in ids if int(i) not in inserted],
-                                 dtype=np.int64)
-                if fresh.size == 0:
-                    continue
-                if self.mode == "aisaq":
-                    # THE AiSAQ step: neighbor codes come from the chunk we
-                    # just read — no N-sized RAM table is ever touched.
-                    codes = inline_codes[valid][
-                        [int(np.flatnonzero(ids == f)[0]) for f in fresh]]
-                else:
-                    codes = self.pq_codes[fresh]
-                d = adc(codes)
-                stats.pq_dists += int(fresh.size)
-                inserted.update(int(f) for f in fresh)
-                new_ids.append(fresh)
-                new_d.append(d)
-            if new_ids:
-                cand_ids = np.concatenate([cand_ids] + new_ids)
-                cand_d = np.concatenate([cand_d] + new_d)
-        if rerank is None:
-            # re-rank by full-precision distances collected along the path
-            vids = np.array(list(expanded.keys()), dtype=np.int64)
-            vd = np.array(list(expanded.values()), dtype=np.float32)
-            topk = vids[np.argsort(vd, kind="stable")[:k]]
-        else:
-            topk = self._rerank_tail_ref(q, k, rerank, cand_ids, expanded,
-                                         stats)
-        stats.latency_s = time.perf_counter() - t0
-        return self._map_out(topk), stats
-
-    def _rerank_tail_ref(self, q: np.ndarray, k: int, rerank: int,
-                         cand_ids: np.ndarray, expanded: Dict[int, float],
-                         stats: SearchStats) -> np.ndarray:
-        """Scalar oracle of the exact rerank tier: rescore the final
-        (PQ-sorted) candidate list with full-precision vectors. Expanded
-        candidates reuse the exact distance computed during traversal;
-        unexpanded ones cost one chunk read each (accounted as
-        ``rerank_ios``). ``rerank == 0`` returns the PQ-only ranking."""
-        limit = max(int(rerank), k) if rerank else k
-        sel = cand_ids[:limit]
-        if not rerank:                   # PQ-only tier: no rescoring
-            return sel[:k].copy()
-        metric = self.meta["metric"]
-        d = np.empty(sel.size, np.float32)
-        for j, p in enumerate(int(x) for x in sel):
-            if p in expanded:
-                d[j] = expanded[p]
-                continue
-            raw = self._read_chunk(p, stats)
-            stats.rerank_ios += 1
-            vec, _, _ = parse_chunk(raw, self.layout)
-            vf = vec.astype(np.float32)
-            d[j] = -(vf @ q) if metric == "mips" else ((vf - q) ** 2).sum()
-        return sel[np.argsort(d, kind="stable")[:k]]
-
-    # -- vectorized hot path -------------------------------------------------
     def _frontier_offsets(self, nodes: np.ndarray
                           ) -> Tuple[np.ndarray, np.ndarray]:
         """node ids -> (block-aligned file offsets, inner chunk offsets)."""
@@ -420,350 +234,55 @@ class HostIndex:
         per = lay.blocks_per_chunk * lay.block_bytes
         return nodes * per, np.zeros_like(nodes)
 
-    def search(self, q: np.ndarray, k: int, L: int, w: int = 4, *,
-               prefetch: int = 0, adc_dtype: str = "f32",
-               rerank: Optional[int] = None
-               ) -> Tuple[np.ndarray, SearchStats]:
-        """Vectorized beam search (single query). Bit-identical results to
-        `search_ref`; all per-hop work batched (one preadv fetch, one ADC)."""
-        ids, stats = self.search_batch(q[None], k, L, w, prefetch=prefetch,
-                                       adc_dtype=adc_dtype, rerank=rerank)
-        return ids[0], stats[0]
-
-    def search_batch(self, Q: np.ndarray, k: int, L: int, w: int = 4, *,
-                     prefetch: int = 0, adc_dtype: str = "f32",
-                     rerank: Optional[int] = None):
-        """Batched vectorized beam search over all queries at once.
-
-        All queries hop together (per-hop frontier interleaving): each hop
-        gathers the union of every active query's frontier blocks in ONE
-        cache fetch, parses all chunks as a single matrix, and ADCs all
-        fresh neighbor codes of all queries as one (F, m) batch against the
-        shared per-query LUT stack. Returns (ids (nq, k), [SearchStats]).
-
-        ``prefetch=p`` (p > 0) speculatively queues, per query and hop, the
-        blocks of its p closest fresh neighbors for background reading —
-        the likely next frontier — so they land while this hop's candidate
-        bookkeeping runs. Results are unaffected (the cache is exact);
-        only the blocking-syscall count drops. ``adc_dtype="int8"`` runs
-        neighbor ADC through the quantized host path (np_quantize_lut /
-        np_adc_int8 — the numpy twin of the device int8 kernel); exact
-        re-rank distances stay f32.
-
-        ``rerank`` selects the result tier, bit-identical to `search_ref`:
-          * None (default) — top-k by the exact distances of nodes expanded
-            during traversal (the historical behavior),
-          * 0 — PQ-only: top-k of the final candidate list ranked by ADC
-            distance alone (no full-precision rescoring — the DiskANN
-            no-rerank baseline),
-          * r > 0 — the exact rerank tier: the top-max(r, k) candidates of
-            the final PQ-sorted list are rescored with full-precision
-            vectors. Expanded candidates reuse the distance their chunk
-            already yielded; unexpanded ones are fetched through the block
-            cache in one batched read (``rerank_ios`` in SearchStats).
-            The candidate list holds at most L entries, so the effective
-            depth is min(r, L) — pass L >= r for the full depth (the
-            serving-tier factories do this automatically).
-        """
-        assert adc_dtype in ("f32", "int8"), adc_dtype
-        t0 = time.perf_counter()
-        Q = np.asarray(Q, dtype=np.float32)
-        nq = Q.shape[0]
-        lay = self.layout
-        metric = self.meta["metric"]
-        n = int(self.meta["n"])
-        lut = np_build_lut_batch(self.centroids, Q, metric)   # (nq, m, ks)
-        m = lut.shape[1]
-        jj = np.arange(m)
-        if adc_dtype == "int8":
-            # same quantization as search_ref (np_host_lut_int8): the
-            # batch arithmetic below must match np_adc_int8 bit-for-bit
-            lut_q8, scale8 = np_host_lut_int8(lut)
-            lut_g = lut_q8                                    # int8 gather
-            dq = scale8 * np.float32(1 / 127)                 # (nq, m) f32
-        else:
-            lut_g, dq = lut, None
-        pf0 = None
-        if self.cache is not None:
-            c = self.cache.counters
-            pf0 = (c.prefetch_issued, c.prefetch_hits, c.prefetch_wasted)
-        eps = np.asarray(self.meta["entry_points"], dtype=np.int64)
-        n_ep = len(eps)
-        # per-query counters (numpy-resident; folded into SearchStats at end)
-        hops_a = np.zeros(nq, np.int64)
-        ios_a = np.zeros(nq, np.int64)
-        bytes_a = np.zeros(nq, np.int64)
-        pq_a = np.zeros(nq, np.int64)
-        sys_a = np.zeros(nq, np.int64)
-        hit_a = np.zeros(nq, np.int64)
-        miss_a = np.zeros(nq, np.int64)
-        rr_a = np.zeros(nq, np.int64)
-        # candidate lists (sorted by PQ distance, stable; inf-padded to L)
-        width = max(L, n_ep)
-        cand_ids = np.full((nq, width), -1, np.int64)
-        cand_d = np.full((nq, width), np.inf, np.float32)
-        cand_exp = np.ones((nq, width), bool)
-        cand_ids[:, :n_ep] = eps
-        ep_g = lut_g[:, jj, self.ep_codes.astype(np.int64)]   # (nq, n_ep, m)
-        cand_d[:, :n_ep] = (ep_g.astype(np.float32)
-                            * dq[:, None, :]).sum(-1) \
-            if dq is not None else ep_g.sum(-1)
-        cand_exp[:, :n_ep] = False
-        pq_a += n_ep
-        order = np.argsort(cand_d, axis=1, kind="stable")[:, :L]
-        cand_ids = np.take_along_axis(cand_ids, order, 1)
-        cand_d = np.take_along_axis(cand_d, order, 1)
-        cand_exp = np.take_along_axis(cand_exp, order, 1)
-        # visited set: packed uint64 bitset, one row per query
-        bits = np.zeros((nq, -(-n // 64)), np.uint64)
-        np.bitwise_or.at(
-            bits, (np.repeat(np.arange(nq), n_ep), np.tile(eps >> 6, nq)),
-            np.tile(np.uint64(1) << (eps & 63).astype(np.uint64), nq))
-        pool_ids_cols: List[np.ndarray] = []
-        pool_d_cols: List[np.ndarray] = []
-        while True:
-            # 1. frontier = first w unexpanded candidates per query
-            sel = ~cand_exp & np.isfinite(cand_d)
-            fmask = sel & (np.cumsum(sel, axis=1) <= w)
-            if not fmask.any():
-                break
-            qf, cols = np.nonzero(fmask)       # row-major: grouped by query
-            cand_exp |= fmask
-            nf = cand_ids[qf, cols]
-            np.add.at(hops_a, np.unique(qf), 1)
-            np.add.at(ios_a, qf, 1)
-            # 2. ONE batched fetch for every frontier chunk this hop; with
-            # prefetch on, miss runs tolerate `prefetch`-block holes and
-            # read them along (readahead into the cache)
-            blk_off, inner = self._frontier_offsets(nf)
-            blocks, hit_mask, n_sys = self.cache.fetch(blk_off, gap=prefetch)
-            # attribute unique-block hits/misses/bytes to the first query
-            # that asked for each block (hit_mask is in first-appearance
-            # order, matching sorted first-occurrence indices); syscalls to
-            # the hop's lead query
-            uq = qf[np.sort(np.unique(blk_off, return_index=True)[1])]
-            np.add.at(hit_a, uq[hit_mask], 1)
-            np.add.at(miss_a, uq[~hit_mask], 1)
-            np.add.at(bytes_a, uq[~hit_mask], lay.io_bytes)
-            sys_a[qf[0]] += n_sys
-            P = nf.size
-            # chunk slice-out: `inner` takes only nodes_per_block distinct
-            # values, so per-slot basic slicing beats a fancy-index gather
-            chunk = np.empty((P, lay.chunk_bytes), np.uint8)
-            for s in np.unique(inner):
-                rows = inner == s
-                chunk[rows] = blocks[rows, s:s + lay.chunk_bytes]
-            # 3. parse all chunks as one matrix
-            if lay.data_dtype == "uint8":
-                vf = chunk[:, :lay.b_full].astype(np.float32)
-            else:
-                vf = np.ascontiguousarray(chunk[:, :lay.b_full]) \
-                    .view(np.float32).reshape(P, -1)
-            nbr = np.ascontiguousarray(
-                chunk[:, lay.off_ids:lay.off_ids + lay.R * B_NUM]) \
-                .view(np.int32).reshape(P, lay.R).astype(np.int64)
-            qv = Q[qf]
-            if metric == "mips":
-                exact = -np.einsum("pd,pd->p", vf, qv)
-            else:
-                exact = ((vf - qv) ** 2).sum(axis=1)
-            # 4. fresh neighbors: valid, unvisited, first occurrence per query
-            q_rep = np.repeat(qf, lay.R)
-            ids_f = nbr.reshape(-1)
-            valid = ids_f >= 0
-            safe = np.where(valid, ids_f, 0)
-            seen = (bits[q_rep, safe >> 6] >>
-                    (safe & 63).astype(np.uint64)) & np.uint64(1)
-            first_occ = np.zeros(ids_f.size, bool)
-            key = np.where(valid, q_rep * n + safe,
-                           nq * n + np.arange(ids_f.size))
-            first_occ[np.unique(key, return_index=True)[1]] = True
-            fresh = valid & (seen == 0) & first_occ
-            f_q = q_rep[fresh]
-            f_ids = ids_f[fresh]
-            if lay.mode == "aisaq":
-                # THE AiSAQ step: neighbor codes come from the chunks we just
-                # fetched — no N-sized RAM table is ever touched.
-                codes = chunk[:, lay.off_pq:lay.off_pq + lay.R * lay.pq_m] \
-                    .reshape(P * lay.R, lay.pq_m)[fresh]
-            else:
-                codes = self.pq_codes[f_ids]
-            f_g = lut_g[f_q[:, None], jj[None, :], codes.astype(np.int64)]
-            f_d = (f_g.astype(np.float32) * dq[f_q]).sum(-1) \
-                if dq is not None else f_g.sum(-1).astype(np.float32)
-            np.add.at(pq_a, f_q, 1)
-            np.bitwise_or.at(bits, (f_q, f_ids >> 6),
-                             np.uint64(1) << (f_ids & 63).astype(np.uint64))
-            # 5. insert fresh neighbors, re-sort, trim to L
-            counts = np.bincount(f_q, minlength=nq)
-            K = int(counts.max()) if counts.size else 0
-            if K:
-                nrank = _group_rank(f_q)
-                new_ids = np.full((nq, K), -1, np.int64)
-                new_d = np.full((nq, K), np.inf, np.float32)
-                new_ids[f_q, nrank] = f_ids
-                new_d[f_q, nrank] = f_d
-                all_ids = np.concatenate([cand_ids, new_ids], axis=1)
-                all_d = np.concatenate([cand_d, new_d], axis=1)
-                all_exp = np.concatenate(
-                    [cand_exp, ~np.isfinite(new_d)], axis=1)
-                order = np.argsort(all_d, axis=1, kind="stable")[:, :L]
-                cand_ids = np.take_along_axis(all_ids, order, 1)
-                cand_d = np.take_along_axis(all_d, order, 1)
-                cand_exp = np.take_along_axis(all_exp, order, 1)
-            # 6. async next-hop prefetch (double-buffering): the candidate
-            # list the NEXT hop will select its frontier from is final
-            # here, so the top `prefetch` unexpanded candidates per query
-            # are its exact frontier (depth > w adds margin for later
-            # hops). Queue their blocks now — the background thread reads
-            # them while the pool bookkeeping below and the next hop's
-            # frontier selection run on this thread, turning next hop's
-            # blocking misses into prefetch hits. Results are unaffected.
-            if prefetch > 0:
-                psel = ~cand_exp & np.isfinite(cand_d)
-                pn = cand_ids[psel & (np.cumsum(psel, axis=1) <= prefetch)]
-                if pn.size:
-                    self.cache.prefetch_async(
-                        self._frontier_offsets(pn)[0])
-            # 7. pool the exact distances of expanded nodes (re-rank pool)
-            frank = _group_rank(qf)
-            pcol_i = np.full((nq, w), -1, np.int64)
-            pcol_d = np.full((nq, w), np.inf, np.float32)
-            pcol_i[qf, frank] = nf
-            pcol_d[qf, frank] = exact
-            pool_ids_cols.append(pcol_i)
-            pool_d_cols.append(pcol_d)
-        out = np.full((nq, k), -1, np.int64)
-        if rerank is not None:
-            # -- exact rerank tier over the FINAL candidate list ------------
-            # (the scalar twin is _rerank_tail_ref; both must stay
-            # bit-identical). The final list is PQ-sorted with inf padding.
-            r_eff = max(int(rerank), k) if rerank else 0
-            exp_map: List[Dict[int, float]] = [{} for _ in range(nq)]
-            if r_eff and pool_ids_cols:
-                pool_ids = np.concatenate(pool_ids_cols, axis=1)
-                pool_d = np.concatenate(pool_d_cols, axis=1)
-                for i in range(nq):
-                    vmask = pool_ids[i] >= 0
-                    exp_map[i] = dict(zip(pool_ids[i][vmask].tolist(),
-                                          pool_d[i][vmask].tolist()))
-            sel_ids: List[np.ndarray] = []
-            sel_d: List[Optional[np.ndarray]] = []
-            need_pairs: List[Tuple[int, int]] = []
-            need_nodes: List[int] = []
-            for i in range(nq):
-                vmask = (cand_ids[i] >= 0) & np.isfinite(cand_d[i])
-                sel = cand_ids[i][vmask][:max(r_eff, k)]
-                sel_ids.append(sel)
-                if not r_eff:            # PQ-only tier: keep ADC ranking
-                    sel_d.append(None)
-                    continue
-                d = np.full(sel.size, np.inf, np.float32)
-                for j, p in enumerate(sel.tolist()):
-                    e = exp_map[i].get(p)
-                    if e is None:
-                        need_pairs.append((i, j))
-                        need_nodes.append(p)
-                    else:
-                        d[j] = e
-                sel_d.append(d)
-            if need_nodes:
-                # one batched cache fetch for every unexpanded candidate
-                nodes = np.asarray(need_nodes, dtype=np.int64)
-                nqi = np.asarray([pr[0] for pr in need_pairs], dtype=np.int64)
-                blk_off, inner = self._frontier_offsets(nodes)
-                blocks, hit_mask, n_sys = self.cache.fetch(blk_off)
-                uq = nqi[np.sort(np.unique(blk_off, return_index=True)[1])]
-                np.add.at(hit_a, uq[hit_mask], 1)
-                np.add.at(miss_a, uq[~hit_mask], 1)
-                np.add.at(bytes_a, uq[~hit_mask], lay.io_bytes)
-                sys_a[nqi[0]] += n_sys
-                np.add.at(ios_a, nqi, 1)
-                np.add.at(rr_a, nqi, 1)
-                P2 = nodes.size
-                chunk = np.empty((P2, lay.chunk_bytes), np.uint8)
-                for s in np.unique(inner):
-                    rows = inner == s
-                    chunk[rows] = blocks[rows, s:s + lay.chunk_bytes]
-                if lay.data_dtype == "uint8":
-                    vf = chunk[:, :lay.b_full].astype(np.float32)
-                else:
-                    vf = np.ascontiguousarray(chunk[:, :lay.b_full]) \
-                        .view(np.float32).reshape(P2, -1)
-                qv = Q[nqi]
-                if metric == "mips":
-                    ex = -np.einsum("pd,pd->p", vf, qv)
-                else:
-                    ex = ((vf - qv) ** 2).sum(axis=1)
-                for (i, j), e in zip(need_pairs, ex):
-                    sel_d[i][j] = e
-            for i in range(nq):
-                if r_eff:
-                    top = sel_ids[i][
-                        np.argsort(sel_d[i], kind="stable")[:k]]
-                else:
-                    top = sel_ids[i][:k]
-                out[i, :top.size] = top
-        elif pool_ids_cols:
-            # re-rank over every expanded node, in expansion order
-            # (stable ties) — the traversal-pool tier
-            pool_ids = np.concatenate(pool_ids_cols, axis=1)
-            pool_d = np.concatenate(pool_d_cols, axis=1)
-            for i in range(nq):
-                vmask = pool_ids[i] >= 0
-                vids, vd = pool_ids[i][vmask], pool_d[i][vmask]
-                top = vids[np.argsort(vd, kind="stable")[:k]]
-                out[i, :top.size] = top
-        wall = time.perf_counter() - t0
-        stats = []
-        for i in range(nq):
-            stats.append(SearchStats(
-                hops=int(hops_a[i]), ios=int(ios_a[i]),
-                bytes_read=int(bytes_a[i]), pq_dists=int(pq_a[i]),
-                latency_s=wall / nq, syscalls=int(sys_a[i]),
-                cache_hits=int(hit_a[i]), cache_misses=int(miss_a[i]),
-                rerank_ios=int(rr_a[i])))
-        if pf0 is not None:
-            # whole-batch prefetch deltas, attributed to the lead query
-            c = self.cache.counters
-            stats[0].prefetch_issued = c.prefetch_issued - pf0[0]
-            stats[0].prefetch_hits = c.prefetch_hits - pf0[1]
-            stats[0].prefetch_wasted = c.prefetch_wasted - pf0[2]
-        return self._map_out(out), stats
+    # -- search (delegates to the core.traversal engine) --------------------
+    def search_ref(self, q: np.ndarray, k: int, L: int, w: int = 4, *,
+                   adc_dtype: str = "f32", rerank: Optional[int] = None
+                   ) -> Tuple[np.ndarray, SearchStats]:
+        """Scalar DiskANN beam search (paper Algorithm 1) — the semantics
+        oracle the vectorized hot path must match bit-for-bit (per
+        adc_dtype).  See ``core.traversal.search_ref``."""
+        ids, stats = _traversal.search_ref(self, q, k, L, w,
+                                           adc_dtype=adc_dtype,
+                                           rerank=rerank)
+        return self._map_out(ids), stats
 
     def search_batch_ref(self, Q: np.ndarray, k: int, L: int, w: int = 4, *,
                          adc_dtype: str = "f32",
                          rerank: Optional[int] = None):
         """Scalar reference loop (the seed implementation's search_batch)."""
-        ids = np.zeros((Q.shape[0], k), dtype=np.int64)
-        stats = []
-        for i in range(Q.shape[0]):
-            ids[i], s = self.search_ref(Q[i], k, L, w, adc_dtype=adc_dtype,
-                                        rerank=rerank)
-            stats.append(s)
-        return ids, stats
+        ids, stats = _traversal.search_batch_ref(self, Q, k, L, w,
+                                                 adc_dtype=adc_dtype,
+                                                 rerank=rerank)
+        return self._map_out(ids), stats
 
+    def search(self, q: np.ndarray, k: int, L: int, w: int = 4, *,
+               prefetch: int = 0, adc_dtype: str = "f32",
+               rerank: Optional[int] = None,
+               pipeline: Optional[bool] = None,
+               gap: Optional[Union[int, str]] = None
+               ) -> Tuple[np.ndarray, SearchStats]:
+        """Vectorized beam search (single query). Bit-identical results to
+        `search_ref`; all per-hop work batched (one preadv fetch, one ADC).
+        See `search_batch` for the knobs."""
+        ids, stats = self.search_batch(q[None], k, L, w, prefetch=prefetch,
+                                       adc_dtype=adc_dtype, rerank=rerank,
+                                       pipeline=pipeline, gap=gap)
+        return ids[0], stats[0]
 
-def _group_rank(group_ids: np.ndarray) -> np.ndarray:
-    """Rank within consecutive groups: [3,3,5,5,5,7] -> [0,1,0,1,2,0].
-    `group_ids` must be non-decreasing (row-major np.nonzero guarantees it).
-    """
-    if group_ids.size == 0:
-        return group_ids
-    starts = np.flatnonzero(
-        np.concatenate([[True], group_ids[1:] != group_ids[:-1]]))
-    return np.arange(group_ids.size) - np.repeat(
-        starts, np.diff(np.concatenate([starts, [group_ids.size]])))
-
-
-def recall_at(ids: np.ndarray, gt: np.ndarray, k: int) -> float:
-    """k-recall@k over a batch: |pred_k ∩ gt_k| / k averaged (vectorized)."""
-    p, g = ids[:, :k], gt[:, :k]
-    srt = np.sort(p, axis=1)
-    if k > 1 and (srt[:, 1:] == srt[:, :-1]).any():
-        # duplicate predictions: fall back to exact set semantics
-        hits = sum(len(set(map(int, rp)) & set(map(int, rg)))
-                   for rp, rg in zip(p, g))
-        return hits / (ids.shape[0] * k)
-    hits = (p[:, :, None] == g[:, None, :]).any(axis=2).sum()
-    return float(hits) / (ids.shape[0] * k)
+    def search_batch(self, Q: np.ndarray, k: int, L: int, w: int = 4, *,
+                     prefetch: int = 0, adc_dtype: str = "f32",
+                     rerank: Optional[int] = None,
+                     pipeline: Optional[bool] = None,
+                     gap: Optional[Union[int, str]] = None):
+        """Batched vectorized beam search over all queries at once, with
+        optional two-hop pipelining (``pipeline``, default on whenever
+        ``prefetch > 0``) and readahead-gap control (``gap``, including
+        ``"auto"``).  Full knob documentation: ``core.traversal
+        .search_batch``.  Returns (ids (nq, k) in ORIGINAL labels,
+        [SearchStats])."""
+        ids, stats = _traversal.search_batch(self, Q, k, L, w,
+                                             prefetch=prefetch,
+                                             adc_dtype=adc_dtype,
+                                             rerank=rerank,
+                                             pipeline=pipeline, gap=gap)
+        return self._map_out(ids), stats

@@ -8,6 +8,12 @@ search, and local top-k results merge via all-gather + global top-k.
 Mesh mapping (DESIGN.md §2):
   query batch  -> ('pod', 'data')   (paper: request load-balancer)
   index shards -> ('model',)        (paper: servers on the ethernet/Lustre tier)
+
+This is the DEVICE-tier fan-out.  The storage-backed host tier it mirrors
+lives in the three-layer core (``core.adc`` numerics, ``core.traversal``
+pipelined beam engine, ``core.index_io`` format/lifecycle); per-shard
+device search has no storage pipeline to overlap, so the host-only
+``pipeline=``/``prefetch=`` knobs do not appear here.
 """
 from __future__ import annotations
 

@@ -88,11 +88,17 @@ def make_device_search_fn(index, layout, *, metric: str = "l2", L: int = 48,
 
 def make_host_search_fn(host_index, *, L: int = 48, w: int = 4,
                         prefetch: int = 0, adc_dtype: str = "f32",
-                        rerank: Optional[int] = None):
+                        rerank: Optional[int] = None,
+                        pipeline: Optional[bool] = None,
+                        gap=None):
     """Wrap `HostIndex.search_batch` (the vectorized storage-backed path)
     into the `(queries, k) -> ids` callable `ServingEngine` consumes.
     `prefetch` enables speculative next-hop block reads off the demand
-    path; `adc_dtype="int8"` serves via the quantized host ADC twin;
+    path; `pipeline` (None = auto: on iff prefetch > 0) keeps two hops in
+    flight so traversal ADC overlaps the background reads (the
+    `core.traversal` two-hop discipline); `gap` tunes readahead
+    coalescing (None = prefetch depth, "auto" = histogram-tuned);
+    `adc_dtype="int8"` serves via the quantized host ADC twin;
     `rerank` selects the result tier (None = traversal pool, 0 = PQ-only,
     r > 0 = exact rerank of the top-r candidates — the beam width is
     widened to r so the full depth exists, matching the device tier)."""
@@ -100,7 +106,8 @@ def make_host_search_fn(host_index, *, L: int = 48, w: int = 4,
         ids, _ = host_index.search_batch(queries, k,
                                          L=max(L, k, rerank or 0), w=w,
                                          prefetch=prefetch,
-                                         adc_dtype=adc_dtype, rerank=rerank)
+                                         adc_dtype=adc_dtype, rerank=rerank,
+                                         pipeline=pipeline, gap=gap)
         return ids
 
     return search

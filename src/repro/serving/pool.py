@@ -326,6 +326,22 @@ class WarmIndexPool:
                 centroid_bytes=self.centroid_bytes(),
                 pinned={n: e.pins for n, e in self._entries.items()
                         if e.pins},
+                # per-handle I/O-engine telemetry: each open handle's block
+                # cache carries the pipelined-traversal counters (demand vs
+                # background syscalls, speculation accounting, the
+                # histogram-chosen readahead gap) — surfaced here so a
+                # multi-tenant operator sees which corpus is I/O-bound
+                caches={n: dict(
+                    hit_rate=e.index.cache.hit_rate(),
+                    demand_syscalls=e.index.cache.counters.syscalls,
+                    prefetch_syscalls=e.index.cache.counters
+                    .prefetch_syscalls,
+                    prefetch_hits=e.index.cache.counters.prefetch_hits,
+                    prefetch_wasted=e.index.cache.counters.prefetch_wasted,
+                    prefetch_errors=e.index.cache.counters.prefetch_errors,
+                    auto_gap=e.index.cache.counters.auto_gap,
+                ) for n, e in self._entries.items()
+                    if e.index.cache is not None},
             )
 
     def close(self, timeout: float = 5.0):

@@ -74,7 +74,8 @@ class RetrievalService:
                  max_batch: int = 16, max_wait_ms: float = 2.0,
                  max_queue_depth: int = 256, L: int = 48, w: int = 4,
                  rerank: Optional[int] = None, adc_dtype: str = "f32",
-                 prefetch: int = 0,
+                 prefetch: int = 0, pipeline: Optional[bool] = None,
+                 gap=None,
                  search_fn: Optional[Callable] = None):
         self.pool = pool
         self.max_batch = max_batch
@@ -84,6 +85,11 @@ class RetrievalService:
         self.rerank = rerank
         self.adc_dtype = adc_dtype
         self.prefetch = prefetch
+        # pipeline=None: auto — two-hop in-flight traversal whenever
+        # prefetch > 0 (core.traversal); gap=None: readahead follows the
+        # prefetch depth, "auto" tunes it from the miss histogram
+        self.pipeline = pipeline
+        self.gap = gap
         self._search_fn = search_fn or self._default_search
         self._cond = threading.Condition()
         self._queues: Dict[str, deque] = {}
@@ -107,7 +113,8 @@ class RetrievalService:
         # rule lives in exactly one place (engine.make_host_search_fn)
         return make_host_search_fn(
             index, L=self.L, w=self.w, prefetch=self.prefetch,
-            adc_dtype=self.adc_dtype, rerank=self.rerank)(queries, k)
+            adc_dtype=self.adc_dtype, rerank=self.rerank,
+            pipeline=self.pipeline, gap=self.gap)(queries, k)
 
     def submit(self, query: np.ndarray, corpus: str = "default", k: int = 10
                ) -> Request:

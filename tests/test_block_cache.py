@@ -267,3 +267,130 @@ def test_invalidate_cancels_inflight_prefetch(blockfile):
     with cache._cond:
         assert 5 * IO not in cache._blocks
     cache.stop()
+
+
+# ---------------------------------------------------------------------------
+# demand-miss histograms + gap="auto" (readahead autotuning)
+# ---------------------------------------------------------------------------
+
+
+def test_miss_histograms_record_runs_and_holes(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=0)
+    # runs [0,1] [4] [7,8,9] -> lengths {2:1, 1:1, 3:1}, holes {2:2}
+    cache.fetch(offs(0, 1, 4, 7, 8, 9))
+    assert cache.miss_run_hist == {2: 1, 1: 1, 3: 1}
+    assert cache.miss_gap_hist == {2: 2}
+
+
+def test_auto_gap_zero_without_enough_observations(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=0)
+    cache.fetch(offs(0, 2, 4))                 # only 2 holes observed
+    assert cache.auto_gap() == 0
+    _, _, n_sys = cache.fetch(offs(0, 2, 4), gap="auto")
+    assert cache.counters.auto_gap == 0
+    assert n_sys == 3                          # no blind coalescing
+
+
+def test_auto_gap_picks_median_hole_and_coalesces(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=0)
+    pattern = offs(*[b for b in range(0, 30) if b % 3 != 2])  # 1-holes
+    for _ in range(2):                         # >= 8 holes observed
+        cache.fetch(pattern)
+    assert cache.auto_gap() == 1
+    _, _, n_plain = cache.fetch(pattern, gap=0)
+    _, _, n_auto = cache.fetch(pattern, gap="auto")
+    assert cache.counters.auto_gap == 1
+    assert n_auto < n_plain
+
+
+def test_auto_gap_refuses_scattered_misses(blockfile):
+    cache = BlockCache(blockfile, IO, capacity_bytes=0)
+    # holes of 11 blocks dominate: far beyond the clamp, auto must pick 0
+    for _ in range(4):
+        cache.fetch(offs(0, 12, 24, 36))
+    assert cache.auto_gap() == 0
+
+
+# ---------------------------------------------------------------------------
+# background-read fault robustness (the pipeline degradation contract)
+# ---------------------------------------------------------------------------
+
+
+def test_failing_background_read_unclaims_inflight(blockfile, monkeypatch):
+    cache = BlockCache(blockfile, IO, capacity_bytes=16 * IO)
+
+    def broken(self, batch, gap=0):
+        raise OSError("injected background failure")
+
+    monkeypatch.setattr(BlockCache, "_pf_read", broken)
+    assert cache.prefetch_async(offs(0, 1, 2)) == 3
+    cache.wait_prefetch()
+    assert cache.counters.prefetch_errors == 1
+    with cache._cond:
+        assert not cache._inflight             # un-claimed, not leaked
+    # demand path still serves the blocks (direct read, no 0.5 s stall)
+    out, hm, n_sys = cache.fetch(offs(0, 1, 2))
+    assert (out[:, 0] == np.array([0, 1, 2])).all()
+    assert n_sys >= 1
+    cache.stop()
+
+
+def test_worker_survives_background_failure(blockfile, monkeypatch):
+    """The prefetch worker must keep serving batches queued AFTER one
+    failed (a dead thread would strand every later in-flight claim)."""
+    cache = BlockCache(blockfile, IO, capacity_bytes=16 * IO)
+    orig = BlockCache._pf_read
+    calls = {"n": 0}
+
+    def flaky(self, batch, gap=0):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("injected first-batch failure")
+        return orig(self, batch, gap)
+
+    monkeypatch.setattr(BlockCache, "_pf_read", flaky)
+    cache.prefetch_async(offs(0, 1))
+    cache.wait_prefetch()
+    cache.prefetch_async(offs(4, 5))
+    cache.wait_prefetch()
+    assert cache.counters.prefetch_errors == 1
+    _, hm, _ = cache.fetch(offs(4, 5))
+    assert hm.all()                            # second batch landed
+    cache.stop()
+
+
+def test_invalidate_blocks_stale_gap_hole_from_background(tmp_path):
+    """Regression: a gap-coalesced HOLE buffer read by the background
+    thread BEFORE an in-place write must never land in the cache after
+    invalidate() — holes carry no _inflight claim, so the invalidation
+    epoch must gate them."""
+    import threading
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"A" * (4 * IO))
+    fd = os.open(p, os.O_RDWR)
+    try:
+        cache = BlockCache(fd, IO, capacity_bytes=8 * IO)
+        read_done = threading.Event()
+        release = threading.Event()
+        orig = BlockCache._iter_read_runs
+
+        def gated(self, offs, gap):
+            for run in orig(self, offs, gap):
+                read_done.set()         # buffers hold PRE-write bytes now
+                release.wait(5.0)       # writer invalidates in this window
+                yield run
+
+        BlockCache._iter_read_runs = gated
+        try:
+            cache.prefetch_async(offs(0, 2), gap=1)  # hole: block 1
+            assert read_done.wait(5.0)
+            os.pwrite(fd, b"B" * IO, IO)             # rewrite block 1
+            cache.invalidate(IO, IO)
+            release.set()
+            cache.wait_prefetch()
+        finally:
+            BlockCache._iter_read_runs = orig
+        out, hm, _ = cache.fetch(offs(1))
+        assert out[0, 0] == ord("B"), "stale pre-write hole served"
+    finally:
+        os.close(fd)

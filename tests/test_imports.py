@@ -1,0 +1,139 @@
+"""Compat-shim and layering guarantees for the three-layer core split.
+
+The PR that decomposed `core/index_io.py` into `core/adc.py` (numerics),
+`core/traversal.py` (beam engine) and a slimmed `core/index_io.py`
+(format + lifecycle) promises external users of the old monolith that
+every pre-split import path keeps resolving — and that the new layering
+introduced no import cycles inside `repro.core`.
+"""
+import ast
+import importlib
+import os
+import pkgutil
+
+import pytest
+
+_OLD_MONOLITH_SYMBOLS = [
+    # ADC numerics (now core.adc)
+    "np_build_lut", "np_build_lut_batch", "np_adc",
+    "np_quantize_lut", "np_adc_int8", "np_host_lut_int8",
+    # engine surface (now core.traversal)
+    "SearchStats", "recall_at",
+    # never moved
+    "HostIndex", "write_index",
+]
+
+
+def test_index_io_reexports_every_monolith_symbol():
+    """`from repro.core.index_io import np_* / SearchStats / ...` — the
+    pre-split import paths — must all still resolve."""
+    index_io = importlib.import_module("repro.core.index_io")
+    for name in _OLD_MONOLITH_SYMBOLS:
+        assert hasattr(index_io, name), f"index_io lost {name}"
+
+
+def test_reexports_are_the_same_objects():
+    """The shim re-exports the REAL objects, not copies: isinstance checks
+    and monkeypatching through either path stay coherent."""
+    from repro.core import adc, index_io, traversal
+    for name in ("np_build_lut", "np_build_lut_batch", "np_adc",
+                 "np_quantize_lut", "np_adc_int8", "np_host_lut_int8"):
+        assert getattr(index_io, name) is getattr(adc, name), name
+    assert index_io.SearchStats is traversal.SearchStats
+    assert index_io.recall_at is traversal.recall_at
+
+
+def test_dynamic_reexports_survive():
+    """core.dynamic's public surface (monolith era) still imports."""
+    from repro.core.dynamic import np_adc, np_build_lut  # noqa: F401
+    from repro.core.dynamic import SearchStats  # noqa: F401
+
+
+def _core_import_graph():
+    """Module-level intra-package import edges of repro.core, via ast (no
+    execution): module -> set of repro.core siblings it imports."""
+    import repro.core as core_pkg
+    pkg_dir = os.path.dirname(core_pkg.__file__)
+    names = {m.name for m in pkgutil.iter_modules([pkg_dir])}
+    graph = {}
+    for name in names:
+        with open(os.path.join(pkg_dir, f"{name}.py")) as f:
+            tree = ast.parse(f.read())
+        deps = set()
+        for node in ast.walk(tree):
+            # only MODULE-LEVEL imports create import-time cycles; imports
+            # inside functions are lazy and explicitly allowed
+            if not isinstance(node, (ast.Import, ast.ImportFrom)):
+                continue
+            if any(not isinstance(p, ast.Module)
+                   for p in _parents(tree, node)):
+                continue
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif node.module:
+                mods = [node.module]
+            for mod in mods:
+                parts = mod.split(".")
+                if parts[:2] == ["repro", "core"] and len(parts) > 2 \
+                        and parts[2] in names:
+                    deps.add(parts[2])
+        graph[name] = deps - {name}
+    return graph
+
+
+def _parents(tree, target):
+    """Chain of ancestor nodes of `target` inside `tree`."""
+    chain = []
+
+    def walk(node, path):
+        if node is target:
+            chain.extend(path)
+            return True
+        for child in ast.iter_child_nodes(node):
+            if walk(child, path + [node]):
+                return True
+        return False
+
+    walk(tree, [])
+    return chain
+
+
+def test_core_has_no_import_cycles():
+    """DFS over the module-level import graph of repro.core: any cycle
+    (e.g. index_io <-> traversal importing each other eagerly) would make
+    the split's import order fragile for external users."""
+    graph = _core_import_graph()
+    # sanity: the expected layering edges exist at all
+    assert "adc" in graph["traversal"]
+    assert {"adc", "traversal"} <= graph["index_io"]
+
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in graph}
+    stack_trace = []
+
+    def dfs(n):
+        color[n] = GREY
+        stack_trace.append(n)
+        for d in sorted(graph.get(n, ())):
+            if color[d] == GREY:
+                cycle = stack_trace[stack_trace.index(d):] + [d]
+                pytest.fail("import cycle in repro.core: "
+                            + " -> ".join(cycle))
+            if color[d] == WHITE:
+                dfs(d)
+        stack_trace.pop()
+        color[n] = BLACK
+
+    for n in sorted(graph):
+        if color[n] == WHITE:
+            dfs(n)
+
+
+def test_every_core_module_imports_cleanly():
+    """Each repro.core module imports on its own (no hidden ordering
+    dependence introduced by the split)."""
+    import repro.core as core_pkg
+    pkg_dir = os.path.dirname(core_pkg.__file__)
+    for m in pkgutil.iter_modules([pkg_dir]):
+        importlib.import_module(f"repro.core.{m.name}")

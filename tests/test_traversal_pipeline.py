@@ -1,0 +1,262 @@
+"""The pipelined traversal engine (core.traversal):
+
+  * bit-identical parity vs the scalar Algorithm-1 oracle across the FULL
+    knob grid {adc_dtype} x {relabel} x {prefetch} x {rerank} x {pipeline},
+  * overlap observability (SearchStats.blocked_wait_s / compute_s),
+  * fault injection: a slow or FAILING background read degrades the
+    pipeline to the serial path — same results, no deadlock,
+  * readahead gap autotuning (gap="auto" from the miss histograms).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.block_cache import BlockCache
+from repro.core.index_io import HostIndex, recall_at, write_index
+
+
+@pytest.fixture(scope="module")
+def rl_index_dir(tmp_path_factory, small_corpus, built_graph, pq_artifacts):
+    """A graph-locality-relabeled AiSAQ index (the cold-path layout)."""
+    base, _, _ = small_corpus
+    cents, codes = pq_artifacts
+    p = str(tmp_path_factory.mktemp("pipe") / "rl")
+    write_index(p, vectors=base, graph=built_graph, centroids=cents,
+                codes=codes, metric="l2", mode="aisaq", relabel=True)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full-grid parity vs the scalar oracle
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_full_knob_grid_parity(index_dirs, rl_index_dir,
+                                        small_corpus):
+    """The tentpole invariant: the pipelined engine returns EXACTLY the
+    scalar oracle's ids over {adc_dtype} x {relabel} x {prefetch} x
+    {rerank}, pipeline forced ON wherever prefetch > 0."""
+    base, q, gt = small_corpus
+    for path in (index_dirs["aisaq"], rl_index_dir):
+        idx = HostIndex.load(path)
+        for adc in ("f32", "int8"):
+            for rerank in (None, 0, 20):
+                ref_ids, ref_st = idx.search_batch_ref(
+                    q, 10, L=40, adc_dtype=adc, rerank=rerank)
+                for pf in (0, 2, 4):
+                    idx.cache.wait_prefetch()
+                    idx.cache.clear()
+                    ids, st = idx.search_batch(
+                        q, 10, L=40, prefetch=pf, adc_dtype=adc,
+                        rerank=rerank, pipeline=pf > 0)
+                    np.testing.assert_array_equal(
+                        ids, ref_ids,
+                        err_msg=f"adc={adc} rerank={rerank} pf={pf}")
+                    # logical I/O identical too — speculation never
+                    # changes what traversal reads, only when
+                    assert [s.ios for s in st] == \
+                        [s.ios for s in ref_st]
+        idx.close()
+
+
+def test_pipeline_defaults_on_with_prefetch(index_dirs, small_corpus):
+    """pipeline=None resolves to ON iff prefetch > 0; the flag is
+    reported in SearchStats."""
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    _, st = idx.search_batch(q, 10, L=40, prefetch=4)
+    assert st[0].pipelined == 1
+    idx.cache.wait_prefetch(), idx.cache.clear()
+    _, st = idx.search_batch(q, 10, L=40)            # prefetch=0
+    assert st[0].pipelined == 0
+    idx.cache.wait_prefetch(), idx.cache.clear()
+    _, st = idx.search_batch(q, 10, L=40, prefetch=4, pipeline=False)
+    assert st[0].pipelined == 0
+    idx.close()
+
+
+def test_overlap_is_observable_in_stats(index_dirs, small_corpus):
+    """blocked_wait_s / compute_s land on the lead query and partition the
+    hop-loop time sanely (never negative, bounded by the batch wall)."""
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    _, st = idx.search_batch(q, 10, L=40, prefetch=4, pipeline=True)
+    wall = sum(s.latency_s for s in st)
+    assert st[0].blocked_wait_s >= 0.0
+    assert st[0].compute_s > 0.0
+    assert st[0].blocked_wait_s + st[0].compute_s <= wall * 1.05 + 1e-3
+    # non-lead queries carry no batch-level overlap accounting
+    assert all(s.blocked_wait_s == 0.0 for s in st[1:])
+    idx.close()
+
+
+def test_single_query_search_accepts_pipeline(index_dirs, small_corpus):
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    a, _ = idx.search_ref(q[0], 10, L=40)
+    b, st = idx.search(q[0], 10, L=40, prefetch=4, pipeline=True)
+    np.testing.assert_array_equal(a, b)
+    assert st.pipelined == 1
+    idx.close()
+
+
+# ---------------------------------------------------------------------------
+# fault injection: the pipeline must DEGRADE, never corrupt or deadlock
+# ---------------------------------------------------------------------------
+
+
+def _run_with_timeout(fn, seconds=30.0):
+    """Run fn on a worker thread; fail the test instead of hanging CI if
+    the pipeline deadlocks."""
+    out: dict = {}
+
+    def target():
+        try:
+            out["result"] = fn()
+        except BaseException as e:     # noqa: BLE001 — surfaced below
+            out["error"] = e
+
+    t = threading.Thread(target=target, daemon=True)
+    t.start()
+    t.join(seconds)
+    assert not t.is_alive(), f"deadlock: search did not finish in {seconds}s"
+    if "error" in out:
+        raise out["error"]
+    return out["result"]
+
+
+def test_slow_background_read_keeps_results(index_dirs, small_corpus,
+                                            monkeypatch):
+    """A crawling prefetch thread: demand fetches wait (bounded) on
+    in-flight blocks or read them directly — results stay oracle-exact."""
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    ref_ids, _ = idx.search_batch_ref(q, 10, L=40)
+    orig = BlockCache._pf_read
+
+    def slow_read(self, batch, gap=0):
+        time.sleep(0.05)
+        return orig(self, batch, gap)
+
+    monkeypatch.setattr(BlockCache, "_pf_read", slow_read)
+    ids, st = _run_with_timeout(
+        lambda: idx.search_batch(q, 10, L=40, prefetch=4, pipeline=True))
+    np.testing.assert_array_equal(ids, ref_ids)
+    idx.close()
+
+
+def test_failing_background_read_degrades_to_serial(index_dirs,
+                                                    small_corpus,
+                                                    monkeypatch):
+    """EVERY background read raises: the worker must survive, un-claim its
+    in-flight blocks (so demand fetches stop waiting for reads that will
+    never land), count the failures, and the search must still match the
+    oracle — the serial-path degradation promise."""
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    ref_ids, _ = idx.search_batch_ref(q, 10, L=40)
+
+    def broken_read(self, batch, gap=0):
+        raise OSError("injected: background preadv failed")
+
+    monkeypatch.setattr(BlockCache, "_pf_read", broken_read)
+    # gap=0 disables demand-path readahead so ALL speculation would have
+    # to come from the (broken) background thread
+    ids, st = _run_with_timeout(
+        lambda: idx.search_batch(q, 10, L=40, prefetch=4, pipeline=True,
+                                 gap=0))
+    np.testing.assert_array_equal(ids, ref_ids)
+    c = idx.cache.counters
+    assert c.prefetch_errors > 0
+    # nothing speculative ever landed; all I/O fell back to the demand path
+    assert c.prefetch_issued == 0
+    assert recall_at(ids, gt, 10) == recall_at(ref_ids, gt, 10)
+    idx.close()
+
+
+def test_flaky_background_read_no_duplicate_or_lost_blocks(
+        index_dirs, small_corpus, monkeypatch):
+    """Alternating background success/failure: results exact and every
+    block is read at least once, with failed batches retried on the
+    demand path (no lost reads)."""
+    base, q, gt = small_corpus
+    idx = HostIndex.load(index_dirs["aisaq"])
+    ref_ids, _ = idx.search_batch_ref(q, 10, L=40)
+    orig = BlockCache._pf_read
+    calls = {"n": 0}
+
+    def flaky(self, batch, gap=0):
+        calls["n"] += 1
+        if calls["n"] % 2:
+            raise OSError("injected flake")
+        return orig(self, batch, gap)
+
+    monkeypatch.setattr(BlockCache, "_pf_read", flaky)
+    ids, st = _run_with_timeout(
+        lambda: idx.search_batch(q, 10, L=40, prefetch=4, pipeline=True))
+    np.testing.assert_array_equal(ids, ref_ids)
+    assert calls["n"] > 1
+    idx.close()
+
+
+# ---------------------------------------------------------------------------
+# readahead gap autotuning
+# ---------------------------------------------------------------------------
+
+
+def test_gap_auto_matches_oracle_and_reports_choice(rl_index_dir,
+                                                    small_corpus):
+    base, q, gt = small_corpus
+    idx = HostIndex.load(rl_index_dir)
+    ref_ids, _ = idx.search_batch_ref(q, 10, L=40)
+    ids, st = idx.search_batch(q, 10, L=40, prefetch=4, gap="auto")
+    np.testing.assert_array_equal(ids, ref_ids)
+    # the histograms were populated and a (possibly zero) gap was chosen
+    assert sum(idx.cache.miss_run_hist.values()) > 0
+    assert idx.cache.counters.auto_gap == idx.cache.auto_gap()
+    assert 0 <= idx.cache.counters.auto_gap <= 8
+    idx.close()
+
+
+def test_gap_auto_needs_observations(tmp_path):
+    """Before enough holes are observed, auto falls back to gap=0 (no
+    blind readahead)."""
+    io = 4096
+    p = tmp_path / "f.bin"
+    p.write_bytes(bytes(64 * io))
+    import os
+    fd = os.open(p, os.O_RDONLY)
+    try:
+        cache = BlockCache(fd, io, capacity_bytes=32 * io)
+        assert cache.auto_gap() == 0
+        out, hm, n_sys = cache.fetch(np.array([0, 2 * io]), gap="auto")
+        assert cache.counters.auto_gap == 0
+        assert n_sys == 2                       # no blind coalescing yet
+    finally:
+        os.close(fd)
+
+
+def test_gap_auto_learns_small_holes(tmp_path):
+    """A workload whose misses are runs separated by 1-block holes teaches
+    auto to coalesce them: later fetches merge runs (fewer syscalls)."""
+    import os
+    io = 4096
+    p = tmp_path / "f.bin"
+    p.write_bytes(bytes(256 * io))
+    fd = os.open(p, os.O_RDONLY)
+    try:
+        cache = BlockCache(fd, io, capacity_bytes=0)   # no retention:
+        # every fetch is a fresh miss pattern, isolating the gap logic
+        # pattern: blocks {0,1, 3,4, 6,7, ...} — holes of exactly 1
+        offs = np.array([b * io for b in range(0, 40)
+                         if b % 3 != 2], dtype=np.int64)
+        cache.fetch(offs)                       # teach the histogram
+        assert cache.auto_gap() == 1
+        _, _, n_plain = cache.fetch(offs, gap=0)
+        _, _, n_auto = cache.fetch(offs, gap="auto")
+        assert cache.counters.auto_gap == 1
+        assert n_auto < n_plain                 # coalesced through holes
+    finally:
+        os.close(fd)
