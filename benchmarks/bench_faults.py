@@ -1,0 +1,371 @@
+"""Storage fault-tolerance drill: seeded faults against the serving stack.
+
+Serves the 6-corpus zipf workload (bench_serving's stream) through
+`RetrievalService` with a deterministic `FaultInjector` under every
+corpus's block reads:
+
+  * every corpus sees transient EIO at ~1e-3 per read — the retry layer
+    must absorb these invisibly (completed answers stay bit-identical to
+    the fault-free references),
+  * ONE corpus additionally serves flipped bits from its entry-point
+    block for a finite number of reads (a sick region that later heals):
+    the CRC layer turns those reads into `CorruptBlockError`, consecutive
+    failures quarantine the corpus, submits fail fast with
+    `CorpusUnhealthyError`, and a half-open probe recovers it once the
+    region heals.
+
+Every request must end in exactly one bucket — completed, io_error,
+unhealthy_rejected, expired — and the buckets must sum to the stream
+length (100% completion-or-clean-rejection).  Worker deaths must be 0.
+
+A separate fault-free section measures the checksum-verification cost on
+the warm path (cache-hit serving must pay ~nothing; the report asserts
+< 5%) and, informatively, on the cold path where every read is verified.
+
+    PYTHONPATH=src:. python benchmarks/bench_faults.py          # full
+    PYTHONPATH=src:. python benchmarks/bench_faults.py --quick  # CI smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.faults import FaultInjector, FaultPlan
+from repro.core.index_io import HostIndex
+from repro.serving.pool import CorpusUnhealthyError, WarmIndexPool
+from repro.serving.service import BackpressureError, RetrievalService
+
+SCHEMA_VERSION = 1
+N_CORPORA = 6
+N_REQUESTS = 600
+ZIPF_A = 1.1
+CACHE_BYTES = 1 << 20
+K, L, W = 10, 32, 4
+EIO_RATE = 1e-3            # transient-EIO probability per (offset, attempt)
+CORRUPT_READS = 8          # sick block serves this many flipped-bit reads
+FAULT_SEED = 1234
+
+
+def zipf_stream(n_corpora: int, n_requests: int, seed: int = 7):
+    """Deterministic zipf corpus stream (same law as bench_serving)."""
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, n_corpora + 1) ** ZIPF_A
+    p /= p.sum()
+    return rng.choice(n_corpora, size=n_requests, p=p)
+
+
+def entry_block(path: str) -> int:
+    """I/O-unit index of the first entry point's chunk — corrupting it
+    guarantees every search on the corpus hits the fault."""
+    idx = HostIndex.load(path)
+    try:
+        ep = int(idx.meta["entry_points"][0])
+        return idx.layout.file_offset(ep) // idx.layout.io_bytes
+    finally:
+        idx.close()
+
+
+def _fault_free_refs(paths, queries_per_corpus, k, L, w):
+    """Per-corpus reference ids with no injector: the bit-identity bar."""
+    refs = {}
+    for name, p in paths.items():
+        idx = HostIndex.load(p, cache_bytes=CACHE_BYTES)
+        refs[name], _ = idx.search_batch(queries_per_corpus[name], k, L=L,
+                                         w=w)
+        idx.close()
+    return refs
+
+
+def run_drill(paths, queries_per_corpus, stream, *, k, L, w,
+              eio_rate=EIO_RATE, corrupt_reads=CORRUPT_READS,
+              quarantine_after=3, cooldown_s=0.5,
+              recovery_timeout_s=30.0) -> dict:
+    """The drill proper: synchronous zipf stream through a service whose
+    pool reads through per-corpus injectors; one corpus's entry block is
+    transiently corrupt.  Returns the full accounting dict; raises
+    nothing — callers assert on the dict so full/quick share one body."""
+    names = sorted(paths)
+    sick = names[0]                      # zipf rank 0: the busiest corpus
+    refs = _fault_free_refs(paths, queries_per_corpus, k, L, w)
+    sick_block = entry_block(paths[sick])
+    injectors = {
+        n: FaultInjector(FaultPlan(
+            seed=FAULT_SEED + i, eio_rate=eio_rate,
+            corrupt_blocks=({sick_block: corrupt_reads} if n == sick
+                            else {})))
+        for i, n in enumerate(names)}
+    pool = WarmIndexPool(paths, cache_bytes=CACHE_BYTES,
+                         preadv_factory=lambda n: injectors[n],
+                         quarantine_after=quarantine_after,
+                         quarantine_cooldown_s=cooldown_s,
+                         probe_timeout_s=5.0)
+    svc = RetrievalService(pool, num_workers=2, max_batch=8,
+                           max_wait_ms=1.0, max_queue_depth=64, L=L, w=w)
+    buckets = dict(completed=0, io_error=0, unhealthy_rejected=0,
+                   expired=0, backpressure=0, other_error=0)
+    mismatches = 0
+    q_next = {n: 0 for n in names}
+    t0 = time.perf_counter()
+    for c in stream:
+        name = names[int(c)]
+        qs = queries_per_corpus[name]
+        qi = q_next[name] % len(qs)
+        q_next[name] += 1
+        try:
+            r = svc.submit_wait(qs[qi], corpus=name, k=k, timeout=30.0)
+            buckets["completed"] += 1
+            if not np.array_equal(np.asarray(r.result), refs[name][qi]):
+                mismatches += 1
+        except CorpusUnhealthyError:
+            buckets["unhealthy_rejected"] += 1
+        except BackpressureError:
+            buckets["backpressure"] += 1
+        except TimeoutError:
+            buckets["expired"] += 1
+        except OSError:
+            buckets["io_error"] += 1
+        except Exception:                # noqa: BLE001 — accounting drill
+            buckets["other_error"] += 1
+    stream_wall = time.perf_counter() - t0
+    # recovery phase: the sick block has healed (finite corrupt budget);
+    # keep knocking until the half-open probe closes the breaker
+    recovered = False
+    deadline = time.monotonic() + recovery_timeout_s
+    while time.monotonic() < deadline:
+        try:
+            svc.submit_wait(queries_per_corpus[sick][0], corpus=sick, k=k,
+                            timeout=10.0)
+            recovered = True
+            break
+        except (CorpusUnhealthyError, OSError, TimeoutError):
+            time.sleep(0.05)
+    workers_alive = sum(t.is_alive() for t in svc._workers)
+    n_workers = len(svc._workers)
+    st = svc.stats()
+    sick_health = pool.health(sick)
+    out = dict(
+        n_requests=len(stream),
+        stream_wall_s=stream_wall,
+        sick_corpus=sick,
+        sick_block=int(sick_block),
+        buckets=buckets,
+        accounted=int(sum(buckets.values())),
+        completion_rate=buckets["completed"] / len(stream),
+        clean_rate=(buckets["completed"] + buckets["unhealthy_rejected"]
+                    + buckets["io_error"] + buckets["expired"])
+        / len(stream),
+        bit_identical_to_fault_free=mismatches == 0,
+        mismatches=mismatches,
+        worker_deaths=n_workers - workers_alive,
+        recovered=recovered,
+        sick_health=sick_health,
+        service=dict(total_completed=st["total_completed"],
+                     total_expired=st["total_expired"],
+                     total_unhealthy_rejected=st["total_unhealthy_rejected"]),
+        cache_totals=dict(
+            read_retries=sum(v["read_retries"]
+                             for v in st["pool"]["caches"].values()),
+            crc_mismatches=sum(v["crc_mismatches"]
+                               for v in st["pool"]["caches"].values()),
+            crc_rereads=sum(v["crc_rereads"]
+                            for v in st["pool"]["caches"].values())),
+        injectors={n: inj.stats() for n, inj in injectors.items()})
+    svc.stop()
+    pool.close()
+    return out
+
+
+def drill_failures(d: dict) -> list:
+    """The drill's pass/fail contract, shared by full and quick modes."""
+    fails = []
+    if d["worker_deaths"]:
+        fails.append(f"{d['worker_deaths']} worker thread(s) died")
+    if d["accounted"] != d["n_requests"]:
+        fails.append(f"accounting leak: {d['accounted']} buckets vs "
+                     f"{d['n_requests']} requests")
+    if d["buckets"]["other_error"] or d["buckets"]["backpressure"]:
+        fails.append(f"unclean outcomes: {d['buckets']}")
+    if d["clean_rate"] < 1.0:
+        fails.append(f"clean completion-or-rejection rate "
+                     f"{d['clean_rate']:.4f} < 1.0")
+    if not d["bit_identical_to_fault_free"]:
+        fails.append(f"{d['mismatches']} completed answers differ from "
+                     "fault-free references")
+    if d["sick_health"]["quarantines"] < 1:
+        fails.append("sick corpus was never quarantined")
+    if not d["recovered"] or d["sick_health"]["recoveries"] < 1 \
+            or d["sick_health"]["state"] != "healthy":
+        fails.append(f"sick corpus did not recover: {d['sick_health']}")
+    if d["cache_totals"]["crc_mismatches"] < 1:
+        fails.append("CRC layer never caught the injected corruption")
+    if d["buckets"]["io_error"] < 1:
+        fails.append("persistent corruption never surfaced as io_error")
+    return fails
+
+
+def bench_checksum_overhead(path: str, queries: np.ndarray, *, k, L, w,
+                            repeats: int = 9) -> dict:
+    """Fault-free verification cost.  Warm path: the cache absorbs every
+    read after warmup, so verify-on must cost ~nothing (< 5% asserted).
+    Cold path: every block read pays one CRC — reported informatively.
+
+    Both handles stay open and the timed passes INTERLEAVE (off/on per
+    round, best-of-N each) so clock drift and one-off stalls hit both
+    sides equally; the OS page cache is pre-warmed before either cold
+    pass so first-touch misses don't masquerade as checksum cost."""
+    with open(os.path.join(path, "chunks.bin"), "rb") as f:
+        while f.read(1 << 20):                      # pre-warm the page cache
+            pass
+    idxs, cold = {}, {}
+    for label, verify in (("verify_off", False), ("verify_on", None)):
+        t0 = time.perf_counter()
+        idx = HostIndex.load(path, cache_bytes=64 << 20,
+                             verify_checksums=verify)
+        idx.search_batch(queries, k, L=L, w=w)      # cold pass: all reads
+        cold[label] = time.perf_counter() - t0
+        idxs[label] = idx
+    warm = {label: float("inf") for label in idxs}
+    for _ in range(repeats):                        # warm passes: all hits
+        for label, idx in idxs.items():
+            t0 = time.perf_counter()
+            idx.search_batch(queries, k, L=L, w=w)
+            warm[label] = min(warm[label], time.perf_counter() - t0)
+    timings = {label: dict(cold_s=cold[label], warm_s=warm[label])
+               for label in idxs}
+    for idx in idxs.values():
+        idx.close()
+    warm_pct = 100.0 * (warm["verify_on"] / warm["verify_off"] - 1.0)
+    cold_pct = 100.0 * (cold["verify_on"] / cold["verify_off"] - 1.0)
+    return dict(timings=timings,
+                warm_overhead_pct=warm_pct,
+                cold_overhead_pct=cold_pct,
+                warm_under_5pct=bool(warm_pct < 5.0))
+
+
+def _drill_corpora():
+    paths = C.ensure_subcorpora(n_sub=N_CORPORA)
+    base, _, _ = C.corpus()
+    sub_n = 2000
+    from repro.data.vectors import make_queries
+    queries_per_corpus = {
+        name: make_queries(32, base[i * sub_n:(i + 1) * sub_n], seed=10 + i)
+        for i, name in enumerate(sorted(paths))}
+    return paths, queries_per_corpus
+
+
+def all_benchmarks():
+    rows = []
+    report = {"schema_version": SCHEMA_VERSION,
+              "workload": dict(n_corpora=N_CORPORA, n_requests=N_REQUESTS,
+                               zipf_a=ZIPF_A, k=K, L=L, w=W,
+                               eio_rate=EIO_RATE,
+                               corrupt_reads=CORRUPT_READS)}
+    paths, qpc = _drill_corpora()
+    stream = zipf_stream(N_CORPORA, N_REQUESTS)
+    report["drill"] = d = run_drill(paths, qpc, stream, k=K, L=L, w=W)
+    fails = drill_failures(d)
+    report["drill"]["failures"] = fails
+    rows.append(("faults_completion_rate", d["completion_rate"],
+                 f"clean={d['clean_rate']:.3f}"))
+    rows.append(("faults_worker_deaths", d["worker_deaths"],
+                 f"quarantines={d['sick_health']['quarantines']}_"
+                 f"recoveries={d['sick_health']['recoveries']}"))
+    rows.append(("faults_bit_identical",
+                 float(d["bit_identical_to_fault_free"]),
+                 f"retries={d['cache_totals']['read_retries']}_"
+                 f"crc={d['cache_totals']['crc_mismatches']}"))
+    report["checksum_overhead"] = ov = bench_checksum_overhead(
+        paths[sorted(paths)[1]], qpc[sorted(paths)[1]], k=K, L=L, w=W)
+    rows.append(("faults_crc_warm_overhead_pct", ov["warm_overhead_pct"],
+                 f"cold={ov['cold_overhead_pct']:.1f}pct"))
+    report["headline"] = dict(
+        drill_passed=not fails,
+        completion_rate=d["completion_rate"],
+        clean_rate=d["clean_rate"],
+        worker_deaths=d["worker_deaths"],
+        quarantines=d["sick_health"]["quarantines"],
+        recoveries=d["sick_health"]["recoveries"],
+        bit_identical_to_fault_free=d["bit_identical_to_fault_free"],
+        crc_warm_overhead_pct=ov["warm_overhead_pct"],
+        crc_warm_under_5pct=ov["warm_under_5pct"])
+    dest = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
+    with open(os.path.abspath(dest), "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"[bench_faults] wrote {os.path.abspath(dest)}")
+    if fails:
+        for msg in fails:
+            print(f"[bench_faults] FAIL: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    if not ov["warm_under_5pct"]:
+        print(f"[bench_faults] FAIL: warm checksum overhead "
+              f"{ov['warm_overhead_pct']:.2f}% >= 5%", file=sys.stderr)
+        raise SystemExit(1)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# CI smoke
+# ---------------------------------------------------------------------------
+
+
+def quick_smoke() -> int:
+    """CI smoke: the identical drill on tiny throwaway corpora (built in a
+    tempdir — CI has no artifact cache).  Asserts zero worker deaths,
+    100% completion-or-clean-rejection, quarantine + half-open recovery,
+    CRC catches the corruption, and completed answers stay bit-identical
+    to fault-free references."""
+    import tempfile
+
+    import jax
+    from repro.core import pq
+    from repro.core.index_io import write_index
+    from repro.core.vamana import build_vamana
+    from repro.data.vectors import make_clustered, make_queries
+
+    t0 = time.perf_counter()
+    n_sub, sub_n, d = 3, 800, 32
+    base = make_clustered(n_sub * sub_n, d, seed=0)
+    cb = pq.train_codebooks(jax.random.PRNGKey(0), base, m=8, iters=6)
+    cents, codes = np.asarray(cb.centroids), np.asarray(pq.encode(cb, base))
+    with tempfile.TemporaryDirectory() as td:
+        paths, qpc = {}, {}
+        for i in range(n_sub):
+            sl = slice(i * sub_n, (i + 1) * sub_n)
+            g = build_vamana(base[sl], R=12, L=24, seed=i)
+            p = os.path.join(td, f"sub{i}")
+            write_index(p, vectors=base[sl], graph=g, centroids=cents,
+                        codes=codes[sl], metric="l2", mode="aisaq")
+            paths[f"sub{i}"] = p
+            qpc[f"sub{i}"] = make_queries(8, base[sl], seed=20 + i)
+        stream = zipf_stream(n_sub, 120)
+        drill = run_drill(paths, qpc, stream, k=5, L=24, w=W,
+                          eio_rate=5e-3, corrupt_reads=6,
+                          quarantine_after=2, cooldown_s=0.2,
+                          recovery_timeout_s=15.0)
+        fails = drill_failures(drill)
+    wall = time.perf_counter() - t0
+    if fails:
+        for msg in fails:
+            print(f"[bench_faults --quick] FAIL: {msg}", file=sys.stderr)
+        return 1
+    b = drill["buckets"]
+    print(f"[bench_faults --quick] all fault-tolerance invariants hold "
+          f"({wall:.1f}s): completed={b['completed']} "
+          f"io_error={b['io_error']} rejected={b['unhealthy_rejected']} "
+          f"quarantines={drill['sick_health']['quarantines']} "
+          f"recoveries={drill['sick_health']['recoveries']} "
+          f"retries={drill['cache_totals']['read_retries']} "
+          f"crc_mismatches={drill['cache_totals']['crc_mismatches']}")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--quick" in sys.argv[1:]:
+        sys.exit(quick_smoke())
+    for name, val, extra in all_benchmarks():
+        print(f"{name},{val:.3f},{extra}")

@@ -34,7 +34,8 @@ PQ_ITERS = 8                      # codebook k-means iters (also stamped)
 
 # bump when write_index's on-disk layout changes: stamps embed it, so a
 # format change rebuilds every cached index
-FMT_VERSION = 1
+# v2: checksummed format (block_crc.npy sidecar + format_version in meta)
+FMT_VERSION = 2
 
 
 # -- build-params stamping ---------------------------------------------------

@@ -22,3 +22,9 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
 
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_serving.py --quick
+
+# fault drill: seeded EIO + a transiently corrupt block against the full
+# serving stack — asserts zero worker deaths, 100% completion-or-clean-
+# rejection, quarantine + half-open recovery, and bit-identical answers
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_faults.py --quick

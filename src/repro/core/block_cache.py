@@ -29,23 +29,52 @@ blocks (background reads + readahead holes), ``prefetch_hits`` counts
 those a demand fetch actually consumed, ``prefetch_wasted`` those evicted,
 cleared, or invalidated unused. Counters feed ``SearchStats`` and the
 bench_search report.
+
+Storage fault tolerance: every raw read — demand, fallback, and
+background — funnels through one ``_read_run`` that (a) retries
+transient errors and short reads under a ``RetryPolicy`` with capped
+exponential backoff, and (b) verifies each block against the per-block
+CRC sidecar (``block_crc``) when the index carries one, with a
+mismatch-triggers-one-reread policy before declaring the bytes corrupt
+(``CorruptBlockError``).  The raw syscall is a pluggable ``preadv``
+hook so ``core.faults.FaultInjector`` can drive a deterministic fault
+schedule through the REAL read path.
 """
 from __future__ import annotations
 
+import errno
 import os
 import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from queue import Queue
-from typing import Dict, List, Optional, Set, Tuple, Union
+from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
 import numpy as np
+
+from repro.core.integrity import CorruptBlockError, _crc32
 
 _PENDING_WAIT_S = 0.5       # bound on waiting for an in-flight prefetch
 _AUTO_GAP_MAX = 8           # largest gap "auto" will ever pick
 _AUTO_GAP_MIN_OBS = 8       # holes observed before "auto" trusts the data
 _GAP_HIST_MAX = 64          # holes larger than this aren't coalescible
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Transient-error retry knob for every storage read the cache issues
+    (demand AND background).  A read failing with a retryable errno — or
+    returning fewer bytes than the run's buffers hold, which the
+    block-multiple file format makes equally transient — is retried up to
+    ``attempts`` total tries with capped exponential backoff.  The final
+    failure propagates unchanged."""
+    attempts: int = 3
+    backoff_s: float = 0.002        # sleep before the first retry
+    backoff_mult: float = 2.0
+    backoff_max_s: float = 0.05
+    retryable: Tuple[int, ...] = (errno.EIO, errno.EAGAIN, errno.EINTR,
+                                  errno.ETIMEDOUT)
 
 
 @dataclass
@@ -63,13 +92,17 @@ class CacheCounters:
     prefetch_wasted: int = 0     # speculative blocks dropped unused
     prefetch_errors: int = 0     # background read batches that raised
     auto_gap: int = 0            # last gap chosen by fetch(gap="auto")
+    read_retries: int = 0        # transient read failures absorbed by retry
+    crc_mismatches: int = 0      # block reads whose checksum mismatched
+    crc_rereads: int = 0         # policy rereads issued after a mismatch
 
     def snapshot(self) -> Tuple[int, ...]:
         return (self.hits, self.misses, self.evictions, self.syscalls,
                 self.bytes_read, self.fetch_calls, self.prefetch_issued,
                 self.prefetch_syscalls, self.prefetch_bytes,
                 self.prefetch_hits, self.prefetch_wasted,
-                self.prefetch_errors, self.auto_gap)
+                self.prefetch_errors, self.auto_gap, self.read_retries,
+                self.crc_mismatches, self.crc_rereads)
 
     def reset(self):
         """Zero every counter in place (phase boundaries in benchmarks)."""
@@ -87,10 +120,25 @@ class BlockCache:
     """
 
     def __init__(self, fd: int, io_bytes: int,
-                 capacity_bytes: int = 10 << 20):
+                 capacity_bytes: int = 10 << 20, *,
+                 preadv: Optional[Callable] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 block_crc: Optional[np.ndarray] = None,
+                 crc: Optional[Callable] = None,
+                 path: str = ""):
         self.fd = fd
         self.io_bytes = int(io_bytes)
         self.capacity_bytes = max(0, int(capacity_bytes))
+        # the fault-tolerance hooks: `preadv` swaps the raw read syscall
+        # (fault injection / alternative transports), `retry` bounds the
+        # transient-error retry loop, `block_crc` (uint32 per io unit)
+        # enables per-block verification of every demand and prefetch
+        # read with a mismatch-triggers-one-reread policy
+        self._preadv = preadv if preadv is not None else os.preadv
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.block_crc = block_crc
+        self._crc = crc if crc is not None else _crc32
+        self._path = path               # error-message context only
         self.max_entries = self.capacity_bytes // self.io_bytes
         self._blocks: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.counters = CacheCounters()
@@ -174,10 +222,91 @@ class BlockCache:
             lo, hi = int(offs[run_start]), int(offs[i - 1])
             nblk = (hi - lo) // io + 1
             bufs = [np.empty(io, np.uint8) for _ in range(nblk)]
-            got = os.preadv(self.fd, bufs, lo)
+            got = self._read_run(bufs, lo)
             yield ({lo + j * io: bufs[j] for j in range(nblk)},
                    set(offs[run_start:i].tolist()), int(got))
             run_start = i
+
+    # -- fault-tolerant raw read (retry + verify) ---------------------------
+    def _read_run(self, bufs: List[np.ndarray], lo: int) -> int:
+        """One coalesced run read: retried preadv, then per-block checksum
+        verification when the cache holds a CRC sidecar.  Every storage
+        read — demand, fallback, and background — funnels through here."""
+        got = self._preadv_retry(bufs, lo)
+        if self.block_crc is not None:
+            self._verify_run(bufs, lo)
+        return got
+
+    def _preadv_retry(self, bufs: List[np.ndarray], lo: int) -> int:
+        """`self._preadv` with the RetryPolicy's capped exponential
+        backoff.  A short read is treated as transient too: chunks.bin is
+        always a whole multiple of io_bytes, so a run can never legally
+        end mid-buffer."""
+        pol = self.retry
+        expect = len(bufs) * self.io_bytes
+        delay = pol.backoff_s
+        attempts = max(1, pol.attempts)
+        for attempt in range(attempts):
+            try:
+                got = int(self._preadv(self.fd, bufs, lo))
+                if got < expect:
+                    raise OSError(
+                        errno.EIO,
+                        f"short read: {got}/{expect} bytes @ {lo}"
+                        f"{' of ' + self._path if self._path else ''}")
+                return got
+            except OSError as e:
+                if e.errno not in pol.retryable \
+                        or attempt == attempts - 1:
+                    raise
+                self.counters.read_retries += 1
+                time.sleep(delay)
+                delay = min(delay * pol.backoff_mult, pol.backoff_max_s)
+        raise AssertionError("unreachable")
+
+    def _verify_run(self, bufs: List[np.ndarray], lo: int):
+        """Check every block of a just-read run against the CRC sidecar.
+        A mismatch triggers exactly ONE reread of that block (a transient
+        in-flight corruption heals); a second mismatch means the bytes on
+        storage are wrong -> CorruptBlockError (errno EIO)."""
+        io = self.io_bytes
+        crc = self.block_crc
+        c = self.counters
+        for j, buf in enumerate(bufs):
+            off = lo + j * io
+            bi = off // io
+            if bi >= crc.shape[0]:
+                continue        # block appended after the sidecar was cut
+            want = int(crc[bi])
+            if self._crc(buf) == want:
+                continue
+            c.crc_mismatches += 1
+            c.crc_rereads += 1
+            self._preadv_retry([buf], off)
+            got = self._crc(buf)
+            if got != want:
+                raise CorruptBlockError(off, want, got, self._path)
+
+    def refresh_crc(self, start: int, nbytes: int):
+        """Recompute sidecar entries for every I/O unit overlapping
+        [start, start+nbytes) after an in-place write (dynamic index
+        mutation), growing the sidecar when an append opened new units.
+        Reads raw bytes (no verification — the point is to re-anchor the
+        checksums to what the write just put on storage)."""
+        if self.block_crc is None or nbytes <= 0:
+            return
+        io = self.io_bytes
+        first = start // io
+        last = (start + nbytes - 1) // io
+        with self._cond:
+            if last >= self.block_crc.shape[0]:
+                grown = np.zeros(last + 1, np.uint32)
+                grown[:self.block_crc.shape[0]] = self.block_crc
+                self.block_crc = grown
+            buf = np.empty(io, np.uint8)
+            for bi in range(first, last + 1):
+                os.preadv(self.fd, [buf], bi * io)
+                self.block_crc[bi] = self._crc(buf)
 
     def _read_runs(self, offs: np.ndarray, gap: int
                    ) -> Tuple[Dict[int, np.ndarray], Dict[int, np.ndarray],

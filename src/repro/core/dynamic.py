@@ -99,6 +99,10 @@ class DynamicHostIndex(HostIndex):
         os.pwrite(self.fd, chunk.tobytes(), off)
         if self.cache is not None:       # in-place write: drop stale blocks
             self.cache.invalidate(off, lay.chunk_bytes)
+            # re-anchor the checksum sidecar to the new on-storage bytes
+            # (grows it when the append opened a new block) so verified
+            # reads keep passing under mutation
+            self.cache.refresh_crc(off, lay.chunk_bytes)
 
     def _dist(self, a: np.ndarray, b: np.ndarray) -> float:
         a, b = a.astype(np.float32), b.astype(np.float32)
@@ -197,6 +201,12 @@ class DynamicHostIndex(HostIndex):
             self._new_codes = []
         with open(os.path.join(self.path, "tombstones.json"), "w") as f:
             json.dump(sorted(self.tombstones), f)
+        if self.cache is not None and self.cache.block_crc is not None:
+            # persist the mutation-refreshed checksums so a reload of the
+            # grown chunks.bin verifies cleanly
+            from repro.core.integrity import CRC_SIDECAR
+            np.save(os.path.join(self.path, CRC_SIDECAR),
+                    self.cache.block_crc)
         with open(os.path.join(self.path, "meta.json"), "w") as f:
             json.dump(self.meta, f, indent=1)
 

@@ -1,0 +1,152 @@
+"""Deterministic, seeded fault injection for the storage read path.
+
+The fault-tolerance layer (retrying reads, checksum rereads, traversal
+degradation, corpus quarantine) is only testable if storage failures are
+*reproducible*.  ``FaultInjector`` is a drop-in replacement for the
+``os.preadv`` callable ``BlockCache`` uses: every read consults a seeded
+schedule and may
+
+  * raise a transient ``OSError`` (EIO or EAGAIN),
+  * return a short read (fewer bytes than the buffers hold),
+  * sleep (latency spike) before serving,
+  * flip one bit in a served buffer (corruption — caught by the CRC
+    layer, or silently wrong on an unchecksummed index).
+
+Determinism discipline
+----------------------
+Faults are keyed by ``hash(seed, kind, offset, attempt)`` where
+``attempt`` is a per-offset call counter.  Two properties follow:
+
+  * a retry of the same offset is a NEW draw — so a schedule with
+    ``eio_rate=r`` makes an n-attempt retry loop fail with probability
+    ~``r^n``, exactly the behavior the retry layer is designed for, and
+  * the schedule does not depend on wall clock or on global call order
+    across offsets, so demand reads and background prefetch reads racing
+    each other cannot change WHICH faults an offset sees, only when.
+
+Persistent corruption is separate from the rate-based schedule:
+``FaultPlan.corrupt_blocks`` maps a block index to how many reads of it
+serve flipped bits (-1 = forever).  A finite count models a transiently
+sick region that later heals — the substrate for quarantine-and-recover
+drills.
+"""
+from __future__ import annotations
+
+import errno
+import hashlib
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class FaultPlan:
+    """Seeded fault schedule. All rates are per (offset, attempt) draw."""
+    seed: int = 0
+    eio_rate: float = 0.0           # transient EIO probability
+    eagain_rate: float = 0.0        # transient EAGAIN probability
+    short_read_rate: float = 0.0    # probability of returning a short read
+    latency_rate: float = 0.0       # probability of a latency spike
+    latency_s: float = 0.002        # spike duration
+    #: block index -> number of reads served with one flipped bit
+    #: (-1 = corrupted forever).  Block index = file_offset // io_bytes.
+    corrupt_blocks: Dict[int, int] = field(default_factory=dict)
+    #: stop injecting rate-based faults after this many (None = unlimited);
+    #: lets a test script exact fault counts ("fail the first read only").
+    max_faults: Optional[int] = None
+
+
+class FaultInjector:
+    """A ``preadv``-shaped callable wrapping ``os.preadv`` with the plan's
+    deterministic fault schedule.  Pass ``injector.preadv`` (or the
+    injector itself) as the BlockCache / HostIndex ``preadv`` hook."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._lock = threading.Lock()
+        self._attempts: Dict[int, int] = {}       # offset -> reads so far
+        self._corrupt_served: Dict[int, int] = {}  # block -> corrupt reads
+        self.calls = 0
+        self.injected_eio = 0
+        self.injected_eagain = 0
+        self.injected_short = 0
+        self.injected_latency = 0
+        self.injected_corrupt = 0
+
+    def __call__(self, fd: int, bufs, offset: int) -> int:
+        return self.preadv(fd, bufs, offset)
+
+    # -- deterministic draws -------------------------------------------------
+    def _u(self, kind: str, offset: int, attempt: int) -> float:
+        h = hashlib.blake2b(
+            f"{self.plan.seed}:{kind}:{offset}:{attempt}".encode(),
+            digest_size=8).digest()
+        return int.from_bytes(h, "big") / 2.0 ** 64
+
+    def _budget_ok(self) -> bool:
+        m = self.plan.max_faults
+        if m is None:
+            return True
+        injected = (self.injected_eio + self.injected_eagain
+                    + self.injected_short + self.injected_latency)
+        return injected < m
+
+    # -- the hook ------------------------------------------------------------
+    def preadv(self, fd: int, bufs, offset: int) -> int:
+        p = self.plan
+        with self._lock:
+            self.calls += 1
+            attempt = self._attempts.get(offset, 0)
+            self._attempts[offset] = attempt + 1
+            budget = self._budget_ok()
+            if budget and self._u("eio", offset, attempt) < p.eio_rate:
+                self.injected_eio += 1
+                raise OSError(errno.EIO,
+                              f"injected transient EIO @ {offset}")
+            if budget and self._u("eagain", offset, attempt) < p.eagain_rate:
+                self.injected_eagain += 1
+                raise OSError(errno.EAGAIN,
+                              f"injected transient EAGAIN @ {offset}")
+            spike = budget and \
+                self._u("lat", offset, attempt) < p.latency_rate
+            short = budget and \
+                self._u("short", offset, attempt) < p.short_read_rate
+            if spike:
+                self.injected_latency += 1
+            if short:
+                self.injected_short += 1
+        if spike:
+            time.sleep(p.latency_s)
+        got = os.preadv(fd, bufs, offset)
+        io = len(bufs[0]) if bufs else 0
+        if p.corrupt_blocks and io:
+            with self._lock:
+                for j, buf in enumerate(bufs):
+                    blk = (offset + j * io) // io
+                    limit = p.corrupt_blocks.get(blk)
+                    if limit is None:
+                        continue
+                    served = self._corrupt_served.get(blk, 0)
+                    if limit >= 0 and served >= limit:
+                        continue        # healed: served its corrupt quota
+                    pos = int(self._u("pos", blk, served) * io) % io
+                    buf[pos] ^= 1 << (served % 8)
+                    self._corrupt_served[blk] = served + 1
+                    self.injected_corrupt += 1
+        if short and got > io:
+            # the buffers are fully populated, but a short return value
+            # tells the caller the tail is garbage — a correct reader
+            # must retry, an incorrect one silently consumes stale bytes
+            return got - io
+        return got
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(calls=self.calls,
+                        injected_eio=self.injected_eio,
+                        injected_eagain=self.injected_eagain,
+                        injected_short=self.injected_short,
+                        injected_latency=self.injected_latency,
+                        injected_corrupt=self.injected_corrupt)

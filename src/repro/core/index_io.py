@@ -30,8 +30,9 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 import time
-from typing import Optional, Tuple, Union
+from typing import Callable, Optional, Tuple, Union
 
 import numpy as np
 
@@ -39,21 +40,54 @@ import numpy as np
 from repro.core.adc import (np_adc, np_adc_int8, np_build_lut,  # noqa: F401
                             np_build_lut_batch, np_host_lut_int8,
                             np_quantize_lut)
-from repro.core.block_cache import BlockCache
+from repro.core.block_cache import BlockCache, RetryPolicy  # noqa: F401
 from repro.core.chunk_layout import ChunkLayout, pack_chunks_file
+from repro.core.integrity import (CRC_SIDECAR, FORMAT_VERSION,
+                                  CorruptIndexError, PREFERRED_ALGO,
+                                  block_checksums, resolve_crc)
 from repro.core import traversal as _traversal
 from repro.core.traversal import SearchStats, recall_at  # noqa: F401
 
 __all__ = [
     "write_index", "HostIndex", "SearchStats", "recall_at",
+    "CorruptIndexError", "FORMAT_VERSION",
     "np_build_lut", "np_build_lut_batch", "np_adc", "np_quantize_lut",
     "np_adc_int8", "np_host_lut_int8",
 ]
+
+#: meta.json keys a loadable index directory must carry — validated up
+#: front so a truncated/corrupt dir fails with CorruptIndexError, not a
+#: KeyError deep inside layout construction.
+_REQUIRED_META = ("n", "dim", "data_dtype", "metric", "mode", "R",
+                  "pq_m", "block_bytes", "entry_points")
 
 
 # ---------------------------------------------------------------------------
 # writer
 # ---------------------------------------------------------------------------
+
+
+def _fsync_dir(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_file(path: str, payload: bytes):
+    """Write + fsync one data file (durability half of crash-safety)."""
+    with open(path, "wb") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _save_npy(path: str, arr: np.ndarray):
+    with open(path, "wb") as f:
+        np.save(f, arr)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
@@ -70,8 +104,19 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
     ``relabeled: true`` and the old->new map lands in ``id_map.npy`` so
     loaders map results back to the ORIGINAL labels — relabeling is
     invisible above the storage layer.
+
+    Crash-safety: every file is written into a ``path + ".tmp"`` sibling,
+    fsynced, and the tmp dir is atomically renamed into place — a crash
+    mid-write leaves either the old index or the new one, never a dir
+    with a meta.json describing half-written chunks.  Integrity: one
+    checksum per I/O unit of chunks.bin lands in the ``block_crc.npy``
+    sidecar (``format_version`` 2); loaders verify every block read
+    against it.
     """
-    os.makedirs(path, exist_ok=True)
+    path = os.path.normpath(path)
+    tmp = path + ".tmp"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
     n, d = vectors.shape
     data_dtype = "uint8" if vectors.dtype == np.uint8 else "float32"
     layout = ChunkLayout(mode=mode, dim=d, data_dtype=data_dtype,
@@ -90,13 +135,16 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
                                       entry_points)
         vectors, graph, codes, entry_points = apply_permutation(
             id_map, vectors, graph, codes, entry_points)
-    with open(os.path.join(path, "chunks.bin"), "wb") as f:
-        f.write(pack_chunks_file(vectors, graph, codes, layout))
-    np.save(os.path.join(path, "pq_centroids.npy"),
-            centroids.astype(np.float32))
-    np.save(os.path.join(path, "pq_codes.npy"), codes.astype(np.uint8))
-    np.save(os.path.join(path, "ep_codes.npy"),
-            codes[entry_points].astype(np.uint8))
+    payload = pack_chunks_file(vectors, graph, codes, layout)
+    _write_file(os.path.join(tmp, "chunks.bin"), payload)
+    _save_npy(os.path.join(tmp, CRC_SIDECAR),
+              block_checksums(payload, layout.io_bytes,
+                              resolve_crc(PREFERRED_ALGO)))
+    _save_npy(os.path.join(tmp, "pq_centroids.npy"),
+              centroids.astype(np.float32))
+    _save_npy(os.path.join(tmp, "pq_codes.npy"), codes.astype(np.uint8))
+    _save_npy(os.path.join(tmp, "ep_codes.npy"),
+              codes[entry_points].astype(np.uint8))
     cent_hash = int(np.abs(centroids.astype(np.float64)).sum() * 1e6) & 0xFFFFFFFF
     meta = dict(
         n=int(n), dim=int(d), data_dtype=data_dtype, metric=metric, mode=mode,
@@ -104,20 +152,72 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
         pq_ks=int(centroids.shape[1]), block_bytes=int(block_bytes),
         entry_points=[int(e) for e in entry_points],
         chunk_bytes=layout.chunk_bytes, io_bytes=layout.io_bytes,
-        centroids_hash=cent_hash, **(extra_meta or {}))
+        centroids_hash=cent_hash, format_version=FORMAT_VERSION,
+        crc_algo=PREFERRED_ALGO, **(extra_meta or {}))
     if id_map is not None:
         # O(N) sidecar, NOT inline json: meta.json must stay ~4 KiB so the
         # shared-centroids index switch (paper §4.4) stays near-free
-        np.save(os.path.join(path, "id_map.npy"), id_map.astype(np.int64))
+        _save_npy(os.path.join(tmp, "id_map.npy"), id_map.astype(np.int64))
         meta["relabeled"] = True
-    with open(os.path.join(path, "meta.json"), "w") as f:
+    # meta.json lands LAST: its presence marks the dir complete
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
+    # atomic publication: move any previous index aside, rename the tmp
+    # sibling into place, then reclaim the old dir
+    old = path + ".old"
+    if os.path.exists(path):
+        shutil.rmtree(old, ignore_errors=True)
+        os.rename(path, old)
+    try:
+        os.rename(tmp, path)
+    except OSError:
+        if os.path.exists(old):          # restore the previous index
+            os.rename(old, path)
+        raise
+    shutil.rmtree(old, ignore_errors=True)
+    parent = os.path.dirname(os.path.abspath(path))
+    _fsync_dir(parent)
     return meta
 
 
 # ---------------------------------------------------------------------------
 # host index lifecycle (search delegates to core.traversal)
 # ---------------------------------------------------------------------------
+
+
+def load_meta(path: str) -> dict:
+    """Read + validate an index dir's meta.json.  Missing, truncated, or
+    key-incomplete metadata raises CorruptIndexError with the failure
+    spelled out — never a raw JSONDecodeError/KeyError traceback."""
+    mpath = os.path.join(path, "meta.json")
+    try:
+        with open(mpath) as f:
+            meta = json.load(f)
+    except FileNotFoundError:
+        raise CorruptIndexError(
+            f"{path!r} is not a loadable index: meta.json is missing "
+            "(incomplete write or wrong directory)") from None
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CorruptIndexError(
+            f"{path!r} has a truncated/corrupt meta.json: {e}") from None
+    if not isinstance(meta, dict):
+        raise CorruptIndexError(
+            f"{path!r} meta.json holds {type(meta).__name__}, not an "
+            "index description")
+    missing = [k for k in _REQUIRED_META if k not in meta]
+    if missing:
+        raise CorruptIndexError(
+            f"{path!r} meta.json is missing required keys {missing} "
+            "(truncated write?)")
+    fmt = int(meta.get("format_version", 1))
+    if fmt > FORMAT_VERSION:
+        raise CorruptIndexError(
+            f"{path!r} has format_version {fmt}; this build understands "
+            f"up to {FORMAT_VERSION} — rebuild or upgrade")
+    return meta
 
 
 class HostIndex:
@@ -139,7 +239,10 @@ class HostIndex:
     @classmethod
     def load(cls, path: str, mode: Optional[str] = None,
              shared_centroids: Optional[np.ndarray] = None,
-             cache_bytes: int = 10 << 20) -> "HostIndex":
+             cache_bytes: int = 10 << 20, *,
+             preadv: Optional[Callable] = None,
+             retry: Optional[RetryPolicy] = None,
+             verify_checksums: Optional[bool] = None) -> "HostIndex":
         """Open an index. `mode` may force diskann/aisaq residency policy.
 
         `shared_centroids`: paper §4.4 — when switching between indices built
@@ -151,12 +254,19 @@ class HostIndex:
         deliberately NOT part of `resident_bytes`: the paper's Table 2 counts
         the *algorithmic* residency that scales with N (code tables), while
         the cache is a fixed, tunable knob — report it via `cache_bytes_used`.
+
+        Fault-tolerance knobs: `preadv` swaps the raw read syscall the
+        block cache issues (fault injection); `retry` overrides the
+        transient-error RetryPolicy (default 3 attempts, capped
+        exponential backoff); `verify_checksums` forces per-block CRC
+        verification on (CorruptIndexError if the dir has no sidecar) or
+        off — None means "verify iff the dir carries a block_crc.npy
+        sidecar", which is how legacy format-v1 dirs keep loading.
         """
         t0 = time.perf_counter()
         self = cls()
         self.path = path
-        with open(os.path.join(path, "meta.json")) as f:
-            self.meta = json.load(f)
+        self.meta = load_meta(path)
         mode = mode or self.meta["mode"]
         self.mode = mode
         self.layout = ChunkLayout(
@@ -177,11 +287,49 @@ class HostIndex:
         if mode == "diskann":
             # DiskANN residency policy: ALL pq codes pinned in RAM.
             self.pq_codes = np.load(os.path.join(path, "pq_codes.npy"))
-        self.fd = os.open(os.path.join(path, "chunks.bin"), os.O_RDONLY)
+        cbin = os.path.join(path, "chunks.bin")
+        try:
+            self.fd = os.open(cbin, os.O_RDONLY)
+        except FileNotFoundError:
+            raise CorruptIndexError(
+                f"{path!r} meta.json exists but chunks.bin is missing "
+                "(torn write?)") from None
+        block_crc, crc_fn = self._load_crc_sidecar(path, verify_checksums)
         self.cache = BlockCache(self.fd, self.layout.io_bytes,
-                                capacity_bytes=cache_bytes)
+                                capacity_bytes=cache_bytes,
+                                preadv=preadv, retry=retry,
+                                block_crc=block_crc, crc=crc_fn,
+                                path=cbin)
         self.load_time_s = time.perf_counter() - t0
         return self
+
+    def _load_crc_sidecar(self, path: str,
+                          verify: Optional[bool]
+                          ) -> Tuple[Optional[np.ndarray],
+                                     Optional[Callable]]:
+        """Resolve the per-block checksum sidecar: (crc array, crc fn) or
+        (None, None) when verification is off.  verify=None auto-enables
+        iff the sidecar exists (legacy v1 dirs load unverified)."""
+        spath = os.path.join(path, CRC_SIDECAR)
+        have = os.path.exists(spath)
+        if verify is None:
+            verify = have
+        if not verify:
+            return None, None
+        if not have:
+            raise CorruptIndexError(
+                f"{path!r}: checksum verification requested but the "
+                f"{CRC_SIDECAR} sidecar is missing")
+        block_crc = np.load(spath)
+        fsize = os.fstat(self.fd).st_size
+        io = self.layout.io_bytes
+        if block_crc.size * io > fsize:
+            raise CorruptIndexError(
+                f"{path!r}: chunks.bin holds {fsize // io} I/O units but "
+                f"{CRC_SIDECAR} describes {block_crc.size} — chunks.bin "
+                "is truncated")
+        return block_crc.astype(np.uint32), \
+            resolve_crc(self.meta.get("crc_algo", "crc32"))
 
     def close(self):
         if self.cache is not None:

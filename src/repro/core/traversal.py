@@ -65,6 +65,12 @@ from repro.core.adc import (np_adc, np_adc_int8, np_build_lut,
                             np_build_lut_batch, np_host_lut_int8)
 from repro.core.chunk_layout import B_NUM, parse_chunk
 
+#: consecutive hops with failed background reads before search_batch
+#: auto-disables its pipelined/prefetch path for the rest of the search —
+#: a sick device should see the serial demand path (whose own RetryPolicy
+#: still applies), not a speculative read storm.
+DEGRADE_AFTER_FAILED_HOPS = 3
+
 
 @dataclass
 class SearchStats:
@@ -91,6 +97,11 @@ class SearchStats:
     blocked_wait_s: float = 0.0
     compute_s: float = 0.0
     pipelined: int = 0      # 1 when the two-hop in-flight path was active
+    # graceful degradation (whole-batch flag on the lead query): 1 when
+    # DEGRADE_AFTER_FAILED_HOPS consecutive hops saw background-read
+    # failures and the engine fell back to the serial demand path for
+    # the remainder of this search
+    degraded: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +304,12 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
     if cache is not None:
         c = cache.counters
         pf0 = (c.prefetch_issued, c.prefetch_hits, c.prefetch_wasted)
+    # graceful degradation state: consecutive hops whose background reads
+    # failed (prefetch_errors delta observed at end of hop)
+    pf_err_last = cache.counters.prefetch_errors if cache is not None else 0
+    pf_fail_hops = 0
+    degraded = False
+    was_pipelined = pipeline            # report the mode the search BEGAN in
     eps = np.asarray(host.meta["entry_points"], dtype=np.int64)
     n_ep = len(eps)
     # per-query counters (numpy-resident; folded into SearchStats at end)
@@ -457,6 +474,24 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
         # below).  Either way results are unaffected.
         if prefetch > 0:
             _issue_prefetch(prefetch)
+        # 6b. graceful degradation: when several consecutive hops see the
+        # background thread's reads FAIL (prefetch_errors climbing), stop
+        # feeding it — disable the pipelined/prefetch path for the rest
+        # of this search and let the serial demand path (with its own
+        # RetryPolicy) carry the traversal.  Results are unaffected: the
+        # cache is exact and speculation never changes what is read, only
+        # when; the fallback is observable via SearchStats.degraded.
+        if (prefetch > 0 or pipeline) and cache is not None:
+            cur = cache.counters.prefetch_errors
+            if cur > pf_err_last:
+                pf_fail_hops += 1
+                if pf_fail_hops >= DEGRADE_AFTER_FAILED_HOPS:
+                    degraded = True
+                    prefetch = 0
+                    pipeline = False
+            else:
+                pf_fail_hops = 0
+            pf_err_last = cur
         # 7. pool the exact distances of expanded nodes (re-rank pool)
         frank = _group_rank(qf)
         pcol_i = np.full((nq, w), -1, np.int64)
@@ -569,7 +604,8 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
     # whole-batch overlap accounting, attributed to the lead query
     stats[0].blocked_wait_s = blocked_s
     stats[0].compute_s = compute_s
-    stats[0].pipelined = int(pipeline)
+    stats[0].pipelined = int(was_pipelined)
+    stats[0].degraded = int(degraded)
     return out, stats
 
 

@@ -9,9 +9,9 @@
 """
 from repro.serving.engine import (Request, ServingEngine,
                                   make_device_search_fn, make_host_search_fn)
-from repro.serving.pool import WarmIndexPool
+from repro.serving.pool import CorpusUnhealthyError, WarmIndexPool
 from repro.serving.service import BackpressureError, RetrievalService
 
 __all__ = ["Request", "ServingEngine", "make_device_search_fn",
            "make_host_search_fn", "WarmIndexPool", "BackpressureError",
-           "RetrievalService"]
+           "CorpusUnhealthyError", "RetrievalService"]

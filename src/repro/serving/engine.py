@@ -123,10 +123,19 @@ class Request:
     t_done: float = 0.0
     event: threading.Event = field(default_factory=threading.Event)
     error: Optional[Exception] = None    # set instead of result on failure
+    # absolute perf_counter deadline; a worker assembling a batch drops
+    # the request (TimeoutError, `expired` telemetry) once it has passed —
+    # an abandoned submit_wait must not burn search capacity
+    deadline: Optional[float] = None
 
     @property
     def latency_s(self) -> float:
         return self.t_done - self.t_submit
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        if self.deadline is None:
+            return False
+        return (time.perf_counter() if now is None else now) > self.deadline
 
 
 class ServingEngine:

@@ -15,7 +15,14 @@ the RAG-retriever scenario.  The pool is that layer:
   * in-flight searches pin their handle (refcounted) so eviction can never
     close an index mid-read; a pinned-over-budget pool overflows rather
     than deadlocks and reports it (`budget_overflow`),
-  * hit / miss / eviction / shared-centroid counters feed `stats()`.
+  * hit / miss / eviction / shared-centroid counters feed `stats()`,
+  * per-corpus HEALTH: consecutive I/O failures (reported by the serving
+    layer via `record_io_failure`) quarantine a corpus — `admit` then
+    fails fast with `CorpusUnhealthyError` instead of queueing doomed
+    work — and a half-open probe (one admitted request after the
+    cooldown) recovers it; each failed probe doubles the cooldown up to
+    a cap.  The state machine is the classic circuit breaker:
+    healthy -> quarantined -> probing -> healthy | quarantined.
 
 `IndexManager` (core.index_switch) is now a thin compat wrapper over a
 budget-for-one pool (`max_open=1`).
@@ -28,11 +35,40 @@ import threading
 import time
 from collections import OrderedDict
 from contextlib import contextmanager
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.index_io import HostIndex
+
+
+class CorpusUnhealthyError(RuntimeError):
+    """Raised by `WarmIndexPool.admit` (and so by `RetrievalService
+    .submit`) for a quarantined corpus — fail fast instead of queueing
+    work onto storage that keeps failing."""
+
+    def __init__(self, corpus: str, state: str, retry_in_s: float):
+        super().__init__(
+            f"corpus {corpus!r} is {state} after repeated I/O failures; "
+            f"retry in ~{max(0.0, retry_in_s):.2f}s")
+        self.corpus = corpus
+        self.state = state
+        self.retry_in_s = max(0.0, retry_in_s)
+
+
+class _Health:
+    """Per-corpus circuit-breaker state (pool lock held for all access)."""
+    __slots__ = ("state", "consec_failures", "quarantines", "recoveries",
+                 "cooldown_s", "until", "probe_at")
+
+    def __init__(self, cooldown_s: float):
+        self.state = "healthy"          # healthy | quarantined | probing
+        self.consec_failures = 0
+        self.quarantines = 0            # transitions INTO quarantined
+        self.recoveries = 0             # successful half-open probes
+        self.cooldown_s = cooldown_s
+        self.until = 0.0                # monotonic time quarantine lifts
+        self.probe_at = 0.0             # when the in-flight probe was armed
 
 
 class _Entry:
@@ -60,12 +96,31 @@ class WarmIndexPool:
                  max_open: Optional[int] = None,
                  mode: Optional[str] = None,
                  cache_bytes: int = 10 << 20,
-                 strict: bool = False):
+                 strict: bool = False,
+                 quarantine_after: int = 3,
+                 quarantine_cooldown_s: float = 1.0,
+                 quarantine_cooldown_max_s: float = 30.0,
+                 probe_timeout_s: float = 10.0,
+                 preadv_factory: Optional[Callable] = None):
         self.paths: Dict[str, str] = dict(paths or {})
         self.budget_bytes = budget_bytes
         self.max_open = max_open
         self.mode = mode
         self.cache_bytes = int(cache_bytes)
+        # health knobs: `quarantine_after` consecutive I/O failures open
+        # the breaker; the cooldown doubles on every failed probe up to
+        # the cap; a probe unresolved for `probe_timeout_s` (e.g. its
+        # request expired unserved) is re-armed rather than wedging the
+        # corpus in `probing` forever
+        self.quarantine_after = int(quarantine_after)
+        self.quarantine_cooldown_s = float(quarantine_cooldown_s)
+        self.quarantine_cooldown_max_s = float(quarantine_cooldown_max_s)
+        self.probe_timeout_s = float(probe_timeout_s)
+        # preadv_factory(name) -> preadv hook (or None) per corpus: the
+        # fault-injection seam for drills — each corpus's BlockCache reads
+        # through its own injector
+        self.preadv_factory = preadv_factory
+        self._health: Dict[str, _Health] = {}
         # strict=True: `pin` BLOCKS until the budget genuinely fits instead
         # of overflowing past pinned handles — the DRAM cap becomes a hard
         # admission resource (a budget-for-one pool then truly serializes
@@ -163,7 +218,10 @@ class WarmIndexPool:
                 try:
                     with open(os.path.join(path, "meta.json")) as f:
                         peek_hash = json.load(f).get("centroids_hash")
-                except OSError:
+                except (OSError, ValueError, AttributeError):
+                    # unreadable/corrupt meta: the real load below raises
+                    # the typed CorruptIndexError; the peek just skips
+                    # centroid sharing
                     peek_hash = None
                 if peek_hash is not None:
                     with self._lock:
@@ -171,7 +229,9 @@ class WarmIndexPool:
                             shared = self._cents[peek_hash][0]
             idx = HostIndex.load(path, mode=self.mode,
                                  shared_centroids=shared,
-                                 cache_bytes=self.cache_bytes)
+                                 cache_bytes=self.cache_bytes,
+                                 preadv=(self.preadv_factory(name)
+                                         if self.preadv_factory else None))
             load_s = time.perf_counter() - t0
         except BaseException:
             with self._lock:
@@ -308,6 +368,91 @@ class WarmIndexPool:
             e = self._entries.get(name)
             return 0 if e is None else e.pins
 
+    # -- per-corpus health (circuit breaker) ---------------------------------
+    def _health_of(self, name: str) -> _Health:
+        h = self._health.get(name)
+        if h is None:
+            h = self._health[name] = _Health(self.quarantine_cooldown_s)
+        return h
+
+    def admit(self, name: str):
+        """Admission gate for new work on `name`.  Healthy corpora pass;
+        a quarantined corpus whose cooldown has elapsed transitions to
+        `probing` and admits THIS caller as the half-open probe; anything
+        else raises CorpusUnhealthyError (fail fast, don't queue doomed
+        work).  A probe left unresolved past `probe_timeout_s` (its
+        request expired or was abandoned) is re-armed."""
+        self._resolve(name)
+        with self._lock:
+            h = self._health.get(name)
+            if h is None or h.state == "healthy":
+                return
+            now = time.monotonic()
+            if h.state == "quarantined":
+                if now >= h.until:
+                    h.state = "probing"
+                    h.probe_at = now
+                    return               # this caller IS the probe
+                raise CorpusUnhealthyError(name, "quarantined",
+                                           h.until - now)
+            # probing: one request is already out testing the waters
+            if now - h.probe_at > self.probe_timeout_s:
+                h.probe_at = now         # stale probe: re-arm with this one
+                return
+            raise CorpusUnhealthyError(
+                name, "probing", self.probe_timeout_s - (now - h.probe_at))
+
+    def record_io_failure(self, name: str):
+        """An admitted request on `name` failed with an I/O error.  Opens
+        the breaker after `quarantine_after` consecutive failures; a
+        failing probe re-quarantines with a doubled cooldown."""
+        with self._lock:
+            h = self._health_of(name)
+            h.consec_failures += 1
+            now = time.monotonic()
+            if h.state == "probing":
+                # the half-open probe failed: back off harder
+                h.cooldown_s = min(h.cooldown_s * 2.0,
+                                   self.quarantine_cooldown_max_s)
+                h.state = "quarantined"
+                h.until = now + h.cooldown_s
+                h.quarantines += 1
+            elif h.state == "healthy" \
+                    and h.consec_failures >= self.quarantine_after:
+                h.state = "quarantined"
+                h.until = now + h.cooldown_s
+                h.quarantines += 1
+            # already quarantined: stale in-flight failures change nothing
+
+    def record_success(self, name: str):
+        """An admitted request on `name` completed.  A successful probe
+        closes the breaker (cooldown resets); successes that raced into a
+        quarantine window are stale evidence and are ignored."""
+        with self._lock:
+            h = self._health.get(name)
+            if h is None:
+                return
+            if h.state == "probing":
+                h.state = "healthy"
+                h.recoveries += 1
+                h.cooldown_s = self.quarantine_cooldown_s
+                h.consec_failures = 0
+            elif h.state == "healthy":
+                h.consec_failures = 0
+
+    def health(self, name: str) -> dict:
+        """Health snapshot for one corpus (fresh corpora are healthy)."""
+        with self._lock:
+            h = self._health.get(name)
+            if h is None:
+                return dict(state="healthy", consec_failures=0,
+                            quarantines=0, recoveries=0)
+            return dict(state=h.state,
+                        consec_failures=h.consec_failures,
+                        quarantines=h.quarantines,
+                        recoveries=h.recoveries,
+                        cooldown_s=h.cooldown_s)
+
     # -- stats / lifecycle ---------------------------------------------------
     def stats(self) -> dict:
         with self._lock:
@@ -340,8 +485,16 @@ class WarmIndexPool:
                     prefetch_wasted=e.index.cache.counters.prefetch_wasted,
                     prefetch_errors=e.index.cache.counters.prefetch_errors,
                     auto_gap=e.index.cache.counters.auto_gap,
+                    read_retries=e.index.cache.counters.read_retries,
+                    crc_mismatches=e.index.cache.counters.crc_mismatches,
+                    crc_rereads=e.index.cache.counters.crc_rereads,
                 ) for n, e in self._entries.items()
                     if e.index.cache is not None},
+                health={n: dict(state=h.state,
+                                consec_failures=h.consec_failures,
+                                quarantines=h.quarantines,
+                                recoveries=h.recoveries)
+                        for n, h in self._health.items()},
             )
 
     def close(self, timeout: float = 5.0):

@@ -29,7 +29,9 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.serving.engine import Request, make_host_search_fn
-from repro.serving.pool import WarmIndexPool
+from repro.serving.pool import CorpusUnhealthyError, WarmIndexPool
+
+__all__ = ["BackpressureError", "CorpusUnhealthyError", "RetrievalService"]
 
 
 class BackpressureError(RuntimeError):
@@ -50,7 +52,7 @@ _LATENCY_WINDOW = 4096       # percentile window per corpus (bounded memory)
 class _CorpusTelemetry:
     __slots__ = ("completed", "rejected", "batches", "switches",
                  "switch_s", "latencies", "first_submit", "last_done",
-                 "errors")
+                 "errors", "expired", "unhealthy_rejected")
 
     def __init__(self):
         self.completed = 0
@@ -64,6 +66,8 @@ class _CorpusTelemetry:
         self.first_submit: Optional[float] = None
         self.last_done: Optional[float] = None
         self.errors = 0
+        self.expired = 0             # dropped at batch assembly: deadline hit
+        self.unhealthy_rejected = 0  # fail-fast submits on quarantined corpus
 
 
 class RetrievalService:
@@ -116,10 +120,18 @@ class RetrievalService:
             adc_dtype=self.adc_dtype, rerank=self.rerank,
             pipeline=self.pipeline, gap=self.gap)(queries, k)
 
-    def submit(self, query: np.ndarray, corpus: str = "default", k: int = 10
-               ) -> Request:
+    def submit(self, query: np.ndarray, corpus: str = "default", k: int = 10,
+               deadline_s: Optional[float] = None) -> Request:
+        """Queue one request.  `deadline_s` (seconds from now) attaches a
+        drop-dead time: a worker assembling a batch skips the request once
+        it has passed (TimeoutError on the request, `expired` telemetry)
+        instead of serving it into the void.  Raises CorpusUnhealthyError
+        when the corpus is quarantined (fail fast) and BackpressureError
+        at the admission depth."""
         self.pool._resolve(corpus)       # one source of the naming KeyError
         r = Request(query=query, corpus=corpus, k=k)
+        if deadline_s is not None:
+            r.deadline = r.t_submit + float(deadline_s)
         with self._cond:
             if self._stop:
                 raise RuntimeError("service stopped")
@@ -129,6 +141,11 @@ class RetrievalService:
                 self._rr.append(corpus)
                 self._tel[corpus] = _CorpusTelemetry()
             tel = self._tel[corpus]
+            try:
+                self.pool.admit(corpus)  # circuit breaker: fail fast
+            except CorpusUnhealthyError:
+                tel.unhealthy_rejected += 1
+                raise
             if len(q) >= self.max_queue_depth:
                 tel.rejected += 1
                 raise BackpressureError(corpus, len(q), self.max_queue_depth)
@@ -140,7 +157,9 @@ class RetrievalService:
 
     def submit_wait(self, query, corpus: str = "default", k: int = 10,
                     timeout: float = 30.0) -> Request:
-        r = self.submit(query, corpus, k)
+        # the wait timeout doubles as the request deadline: if the caller
+        # gives up, no worker should burn a search slot on the orphan
+        r = self.submit(query, corpus, k, deadline_s=timeout)
         if not r.event.wait(timeout):
             raise TimeoutError(
                 f"request to corpus {corpus!r} not served in {timeout}s")
@@ -159,6 +178,29 @@ class RetrievalService:
                 return c
         return None
 
+    def _expire(self, r: Request, now: float):
+        """Fail one deadline-passed request (lock held): the submitter
+        already gave up — serving it would burn a search slot into the
+        void AND count it `completed` (the abandoned-request bug)."""
+        self._tel[r.corpus].expired += 1
+        r.error = TimeoutError(
+            f"request to corpus {r.corpus!r} expired before service")
+        r.t_done = now
+        r.event.set()
+
+    def _pop_live(self, corpus: str) -> Optional[Request]:
+        """Pop the next non-expired request (lock held), failing expired
+        entries along the way.  None when the queue drains."""
+        q = self._queues[corpus]
+        now = time.perf_counter()
+        while q:
+            r = q.popleft()
+            if r.expired(now):
+                self._expire(r, now)
+                continue
+            return r
+        return None
+
     def _worker(self):
         while True:
             with self._cond:
@@ -169,14 +211,19 @@ class RetrievalService:
                     self._cond.wait(0.1)
                     corpus = self._pick_corpus()
                 self._busy.add(corpus)
-                batch = [self._queues[corpus].popleft()]
+                first = self._pop_live(corpus)
             try:
+                if first is None:
+                    continue             # every queued request had expired
+                batch = [first]
                 # linger up to max_wait for the batch to fill
                 deadline = time.perf_counter() + self.max_wait
                 while len(batch) < self.max_batch:
                     with self._cond:
                         if self._queues[corpus]:
-                            batch.append(self._queues[corpus].popleft())
+                            r = self._pop_live(corpus)
+                            if r is not None:
+                                batch.append(r)
                             continue
                         left = deadline - time.perf_counter()
                         if left <= 0 or self._stop:
@@ -206,6 +253,15 @@ class RetrievalService:
                     f"({len(batch)}, k)")
         except Exception as e:           # noqa: BLE001 — fail the batch,
             err = e                      # never kill the worker thread
+        # feed the pool's circuit breaker: OSError covers raw I/O errors,
+        # injected faults that exhausted their retries, and persistent
+        # checksum failures (CorruptBlockError is an OSError with EIO) —
+        # the failures that mean THIS CORPUS'S STORAGE is sick, as opposed
+        # to e.g. a malformed query, which says nothing about the disk
+        if err is None:
+            self.pool.record_success(corpus)
+        elif isinstance(err, OSError):
+            self.pool.record_io_failure(corpus)
         now = time.perf_counter()
         with self._cond:
             tel = self._tel[corpus]
@@ -238,6 +294,8 @@ class RetrievalService:
                     completed=tel.completed,
                     rejected=tel.rejected,
                     errors=tel.errors,
+                    expired=tel.expired,
+                    unhealthy_rejected=tel.unhealthy_rejected,
                     batches=tel.batches,
                     mean_batch=(tel.completed / tel.batches
                                 if tel.batches else 0.0),
@@ -258,6 +316,9 @@ class RetrievalService:
                 corpora=corpora,
                 total_completed=total_done,
                 total_rejected=sum(t.rejected for t in self._tel.values()),
+                total_expired=sum(t.expired for t in self._tel.values()),
+                total_unhealthy_rejected=sum(
+                    t.unhealthy_rejected for t in self._tel.values()),
                 total_switches=sum(t.switches for t in self._tel.values()),
                 uptime_s=time.perf_counter() - self._t0,
                 **({"p50_ms": float(np.percentile(all_lat, 50) * 1e3),
