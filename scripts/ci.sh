@@ -28,3 +28,9 @@ PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
 # rejection, quarantine + half-open recovery, and bit-identical answers
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/bench_faults.py --quick
+
+# ingest drill: concurrent insert+search, a zero-downtime compaction swap
+# under load, and the kill-at-every-journal-offset crash drill — asserts
+# 100% recovery to oracle-identical search results at every crash point
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/bench_ingest.py --quick

@@ -308,6 +308,16 @@ class BlockCache:
                 os.preadv(self.fd, [buf], bi * io)
                 self.block_crc[bi] = self._crc(buf)
 
+    def trim_crc(self, nblocks: int):
+        """Shrink the CRC sidecar to `nblocks` entries after the backing
+        file was truncated (crash-recovery rollback of an appended node):
+        entries past the new end describe bytes that no longer exist and
+        would poison `refresh_crc`'s growth arithmetic."""
+        with self._cond:
+            if self.block_crc is not None \
+                    and nblocks < self.block_crc.shape[0]:
+                self.block_crc = self.block_crc[:max(0, nblocks)].copy()
+
     def _read_runs(self, offs: np.ndarray, gap: int
                    ) -> Tuple[Dict[int, np.ndarray], Dict[int, np.ndarray],
                               int, int]:

@@ -29,6 +29,18 @@ Persistent corruption is separate from the rate-based schedule:
 serve flipped bits (-1 = forever).  A finite count models a transiently
 sick region that later heals — the substrate for quarantine-and-recover
 drills.
+
+Write-path crash injection
+--------------------------
+The write-side twin of the read schedule: ``KillSwitch`` is a
+deterministic crash trigger the mutation path (``DynamicHostIndex`` +
+``core.wal``) ticks at every durability-relevant write step — journal
+frame halves, chunk pwrites, fsyncs, each atomic-flush stage.  Counting
+mode (``at=None``) enumerates a workload's crash points; ``at=k`` raises
+``CrashPoint`` at the k-th tick, freezing the on-storage state exactly
+there.  The kill-at-every-offset drill replays a seeded workload once
+per crash point and asserts recovery-on-load restores a consistent
+index — see ``benchmarks/bench_ingest.py``.
 """
 from __future__ import annotations
 
@@ -39,6 +51,42 @@ import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional
+
+
+class CrashPoint(Exception):
+    """Raised by ``KillSwitch.tick`` to simulate a process crash at an
+    exact point of the write path.  Deliberately an ``Exception`` (not
+    BaseException): the mutation path must not swallow it, and the drill
+    harness catches it at the workload boundary."""
+
+    def __init__(self, label: str, op: int):
+        super().__init__(f"injected crash at write op {op} ({label})")
+        self.label = label
+        self.op = op
+
+
+class KillSwitch:
+    """Deterministic crash trigger for the mutation path.
+
+    Every durability-relevant write step calls ``tick(label)``.  With
+    ``at=None`` the switch only counts (enumeration pass: ``count`` after
+    a workload is the number of distinct crash points).  With ``at=k``
+    the k-th tick raises ``CrashPoint`` exactly once — everything written
+    before the tick stays on storage, nothing after it happens, which is
+    precisely the state a power cut at that instant leaves behind."""
+
+    def __init__(self, at: Optional[int] = None):
+        self.at = at
+        self.count = 0
+        self.fired = False
+        self.labels: list = []      # tick labels in order (enumeration aid)
+
+    def tick(self, label: str):
+        self.count += 1
+        self.labels.append(label)
+        if self.at is not None and not self.fired and self.count >= self.at:
+            self.fired = True
+            raise CrashPoint(label, self.count)
 
 
 @dataclass

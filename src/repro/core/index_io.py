@@ -90,11 +90,35 @@ def _save_npy(path: str, arr: np.ndarray):
         os.fsync(f.fileno())
 
 
+def _atomic_json(path: str, obj):
+    """Crash-safe single-file JSON rewrite: tmp sibling + fsync + atomic
+    rename + directory fsync — the per-file version of `write_index`'s
+    whole-directory recipe, for in-place mutation (`DynamicHostIndex
+    .flush`).  A crash leaves either the old file or the new one, never a
+    truncated one the robust loader would reject."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(os.path.abspath(path)))
+
+
+def _atomic_npy(path: str, arr: np.ndarray):
+    """`_atomic_json`'s .npy twin."""
+    tmp = path + ".tmp"
+    _save_npy(tmp, arr)
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(os.path.abspath(path)))
+
+
 def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
                 centroids: np.ndarray, codes: np.ndarray, metric: str,
                 mode: str, block_bytes: int = 4096, n_ep: int = 1,
                 entry_points: Optional[np.ndarray] = None,
                 relabel: bool = False,
+                labels: Optional[np.ndarray] = None,
                 extra_meta: Optional[dict] = None) -> dict:
     """Serialize one index. Returns the meta dict.
 
@@ -104,6 +128,15 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
     ``relabeled: true`` and the old->new map lands in ``id_map.npy`` so
     loaders map results back to the ORIGINAL labels — relabeling is
     invisible above the storage layer.
+
+    ``labels`` (optional, shape (n,)) assigns each input vector an
+    explicit external label instead of its positional id — the dynamic
+    tier's compactor uses this so labels survive tombstone reclaim (the
+    surviving labels are no longer a permutation of range(n), which the
+    ``id_map`` mechanism cannot express).  The labels land, permuted to
+    storage order when ``relabel`` is on, in a ``labels.npy`` sidecar
+    with ``meta["label_map"] = "direct"``; loaders map results through it
+    in preference to the ``id_map`` inversion.
 
     Crash-safety: every file is written into a ``path + ".tmp"`` sibling,
     fsynced, and the tmp dir is atomically renamed into place — a crash
@@ -128,13 +161,21 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
         entry_points = np.argsort(dd)[:n_ep]
     entry_points = np.asarray(entry_points, dtype=np.int64)[:n_ep]
     id_map = None
+    if labels is not None:
+        labels = np.asarray(labels, dtype=np.int64)
+        if labels.shape[0] != n:
+            raise ValueError(
+                f"labels has {labels.shape[0]} entries for {n} vectors")
     if relabel:
         from repro.core.relabel import apply_permutation, \
-            locality_permutation
+            invert_permutation, locality_permutation
         id_map = locality_permutation(graph, layout.nodes_per_block,
                                       entry_points)
         vectors, graph, codes, entry_points = apply_permutation(
             id_map, vectors, graph, codes, entry_points)
+        if labels is not None:
+            # storage slot i now holds input row new_to_old[i]
+            labels = labels[invert_permutation(id_map)]
     payload = pack_chunks_file(vectors, graph, codes, layout)
     _write_file(os.path.join(tmp, "chunks.bin"), payload)
     _save_npy(os.path.join(tmp, CRC_SIDECAR),
@@ -159,6 +200,9 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
         # shared-centroids index switch (paper §4.4) stays near-free
         _save_npy(os.path.join(tmp, "id_map.npy"), id_map.astype(np.int64))
         meta["relabeled"] = True
+    if labels is not None:
+        _save_npy(os.path.join(tmp, "labels.npy"), labels)
+        meta["label_map"] = "direct"
     # meta.json lands LAST: its presence marks the dir complete
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f, indent=1)
@@ -267,6 +311,18 @@ class HostIndex:
         self = cls()
         self.path = path
         self.meta = load_meta(path)
+        wal_path = os.path.join(path, "wal.log")
+        if not getattr(cls, "_allows_wal", False) \
+                and os.path.exists(wal_path) and os.path.getsize(wal_path):
+            # a non-empty write-ahead journal means unflushed (possibly
+            # half-applied) mutations: the npy/meta files here do NOT
+            # describe chunks.bin.  Only the dynamic loader knows how to
+            # reconcile them — serving this dir read-only would silently
+            # answer from an inconsistent graph.
+            raise CorruptIndexError(
+                f"{path!r} carries a non-empty write-ahead journal "
+                "(wal.log): unrecovered dynamic mutations. Open it with "
+                "DynamicHostIndex.load to recover, or flush the writer.")
         mode = mode or self.meta["mode"]
         self.mode = mode
         self.layout = ChunkLayout(
@@ -278,7 +334,13 @@ class HostIndex:
         else:
             self.centroids = np.load(os.path.join(path, "pq_centroids.npy"))
         self.ep_codes = np.load(os.path.join(path, "ep_codes.npy"))
-        if self.meta.get("relabeled"):
+        if self.meta.get("label_map") == "direct":
+            # explicit per-slot labels (compacted dynamic index): the map
+            # is stored directly — it is generally NOT a permutation of
+            # range(n) (tombstone reclaim leaves label holes), so it takes
+            # precedence over any id_map inversion
+            self.new_to_old = np.load(os.path.join(path, "labels.npy"))
+        elif self.meta.get("relabeled"):
             # graph-locality relabeled index: storage is in new-id space;
             # results must be mapped back to the original labels
             from repro.core.relabel import invert_permutation

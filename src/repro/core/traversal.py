@@ -122,6 +122,7 @@ def search_ref(host, q: np.ndarray, k: int, L: int, w: int = 4, *,
     stats = SearchStats()
     lay = host.layout
     metric = host.meta["metric"]
+    n = int(host.meta["n"])       # snapshot: ids >= n are clamped below
     lut = np_build_lut(host.centroids, q.astype(np.float32), metric)
     if adc_dtype == "int8":
         lut_q8, scale = np_host_lut_int8(lut)
@@ -153,7 +154,11 @@ def search_ref(host, q: np.ndarray, k: int, L: int, w: int = 4, *,
                 expanded[p] = float(-(vf @ q))
             else:
                 expanded[p] = float(((vf - q) ** 2).sum())
-            valid = ids >= 0
+            # clamp to the n snapshot exactly like the -1 padding: under a
+            # concurrent insert a patched chunk may surface an edge to a
+            # node past this search's view of the index — following it
+            # would read past EOF / index the visited bitset out of range
+            valid = (ids >= 0) & (ids < n)
             ids = ids[valid]
             fresh = np.array([i for i in ids if int(i) not in inserted],
                              dtype=np.int64)
@@ -423,7 +428,9 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
         # 4. fresh neighbors: valid, unvisited, first occurrence per query
         q_rep = np.repeat(qf, lay.R)
         ids_f = nbr.reshape(-1)
-        valid = ids_f >= 0
+        # ids >= n clamp mirrors search_ref: a concurrent insert's patched
+        # edge must not index the n-sized bitset or read past EOF
+        valid = (ids_f >= 0) & (ids_f < n)
         safe = np.where(valid, ids_f, 0)
         seen = (bits[q_rep, safe >> 6] >>
                 (safe & 63).astype(np.uint64)) & np.uint64(1)

@@ -142,6 +142,12 @@ class WarmIndexPool:
         self.budget_overflow = 0     # evict walks that could not fit budget
         self.centroid_shares = 0     # loads that reused a pooled array
         self.strict_waits = 0        # strict-mode pin acquisitions that slept
+        self.swaps = 0               # zero-downtime version switches
+        # handles replaced by swap() while searches still pinned them:
+        # they serve their in-flight readers to completion, then close.
+        # Excluded from the LRU and the byte budget — a retired handle is
+        # transient by construction (bounded by in-flight search latency).
+        self._retired: List[Tuple[str, _Entry]] = []
 
     # -- registration --------------------------------------------------------
     def register(self, name: str, path: str):
@@ -268,7 +274,12 @@ class WarmIndexPool:
     def _close_entry(self, name: str, e: _Entry):
         if e.cent_hash is not None and e.cent_hash in self._cents:
             _, users = self._cents[e.cent_hash]
-            users.discard(name)
+            cur = self._entries.get(name)
+            # a swapped-in successor with the SAME centroid hash still
+            # uses the pooled array under this corpus name: closing the
+            # retired predecessor must not drop the name's membership
+            if cur is None or cur is e or cur.cent_hash != e.cent_hash:
+                users.discard(name)
             if not users:
                 del self._cents[e.cent_hash]
         e.index.close()
@@ -334,24 +345,117 @@ class WarmIndexPool:
         handle (see __init__)."""
         return self._acquire(name, share_centroids, do_pin=True)
 
-    def unpin(self, name: str):
+    def unpin(self, name: str, index: Optional[HostIndex] = None):
+        """Release one pin.  `index` identifies WHICH handle the pin was
+        taken on: after a `swap`, a lease acquired on the old version must
+        decrement the retired entry, not its successor under the same
+        name.  `index=None` keeps the legacy name-keyed behavior (correct
+        whenever no swap raced the lease)."""
         with self._lock:
             e = self._entries.get(name)
-            if e is None:
-                return                   # already evicted under overflow
-            e.pins = max(0, e.pins - 1)
-            if e.pins == 0:
-                self._evict_to_budget()  # deferred eviction now possible
-            self._cond.notify_all()      # strict waiters re-check the budget
+            if e is not None and (index is None or e.index is index):
+                e.pins = max(0, e.pins - 1)
+                if e.pins == 0:
+                    self._evict_to_budget()  # deferred eviction possible
+                self._cond.notify_all()  # strict waiters re-check budget
+                return
+            for i, (rname, re_) in enumerate(self._retired):
+                if rname == name and (index is None
+                                      or re_.index is index):
+                    re_.pins = max(0, re_.pins - 1)
+                    if re_.pins == 0:        # last reader drained: retire
+                        del self._retired[i]
+                        self._close_entry(rname, re_)
+                    self._cond.notify_all()
+                    return
+            # neither live nor retired: evicted under overflow — no-op
 
     @contextmanager
     def lease(self, name: str, share_centroids: bool = True):
-        """Context-managed pin: `with pool.lease(c) as (idx, load_s): ...`"""
+        """Context-managed pin: `with pool.lease(c) as (idx, load_s): ...`
+        Unpins by handle identity, so a lease that straddles a `swap`
+        releases the version it actually searched."""
         idx, load_s = self.pin(name, share_centroids)
         try:
             yield idx, load_s
         finally:
-            self.unpin(name)
+            self.unpin(name, index=idx)
+
+    # -- zero-downtime version switch ----------------------------------------
+    def swap(self, name: str, new_path: str,
+             share_centroids: bool = True) -> float:
+        """Atomically repoint corpus `name` at the index directory
+        `new_path` (e.g. a freshly published compaction) with ZERO dropped
+        or wrong-answer requests:
+
+          * the new handle is loaded OUTSIDE the pool lock (searches on
+            the old version keep running throughout),
+          * under the lock the name is repointed — every lease acquired
+            after this instant pins the new version,
+          * the old handle is closed immediately if idle, else parked on
+            the retired list where in-flight leases drain it (identity-
+            keyed `unpin` closes it with the last reader).
+
+        Returns the new handle's load wall-time in seconds.  If `name`
+        was not warm this is just `register` + cold `ensure`."""
+        with self._lock:
+            # wait out any in-flight cold load of the same name: two
+            # handles for one name must serialize through _loading
+            while name in self._loading:
+                self._cond.wait(0.05)
+            self._loading.add(name)
+            self.paths[name] = new_path
+        try:
+            t0 = time.perf_counter()
+            shared = None
+            if share_centroids:
+                try:
+                    with open(os.path.join(new_path, "meta.json")) as f:
+                        peek_hash = json.load(f).get("centroids_hash")
+                except (OSError, ValueError, AttributeError):
+                    peek_hash = None
+                if peek_hash is not None:
+                    with self._lock:
+                        if peek_hash in self._cents:
+                            shared = self._cents[peek_hash][0]
+            idx = HostIndex.load(new_path, mode=self.mode,
+                                 shared_centroids=shared,
+                                 cache_bytes=self.cache_bytes,
+                                 preadv=(self.preadv_factory(name)
+                                         if self.preadv_factory else None))
+            load_s = time.perf_counter() - t0
+        except BaseException:
+            with self._lock:
+                self._loading.discard(name)
+                self._cond.notify_all()
+            raise
+        with self._lock:
+            old = self._entries.pop(name, None)
+            cent_hash = idx.meta.get("centroids_hash") \
+                if share_centroids else None
+            e = _Entry(idx, cent_hash, load_s)
+            if shared is not None:
+                self.centroid_shares += 1
+            if cent_hash is not None:
+                if cent_hash not in self._cents:
+                    self._cents[cent_hash] = (idx.centroids, set())
+                elif idx.centroids is not self._cents[cent_hash][0]:
+                    idx.centroids = self._cents[cent_hash][0]
+                    self.centroid_shares += 1
+                self._cents[cent_hash][1].add(name)
+            self._entries[name] = e
+            self._entries.move_to_end(name)
+            self._sizes[name] = self._entry_bytes(e)
+            self.swaps += 1
+            if old is not None:
+                if old.pins == 0:
+                    self._close_entry(name, old)
+                else:
+                    self._retired.append((name, old))
+            self._evict_to_budget()
+            self._loading.discard(name)
+            self._cond.notify_all()
+            return load_s
 
     def peek(self, name: str) -> Optional[HostIndex]:
         """The open handle for `name`, or None — no LRU touch, no load."""
@@ -465,6 +569,8 @@ class WarmIndexPool:
                 budget_overflow=self.budget_overflow,
                 centroid_shares=self.centroid_shares,
                 strict_waits=self.strict_waits,
+                swaps=self.swaps,
+                retired=len(self._retired),
                 used_bytes=self.used_bytes(),
                 budget_bytes=self.budget_bytes,
                 max_open=self.max_open,
@@ -504,7 +610,8 @@ class WarmIndexPool:
         deadline = time.monotonic() + timeout
         with self._lock:
             while self._loading \
-                    or any(e.pins > 0 for e in self._entries.values()):
+                    or any(e.pins > 0 for e in self._entries.values()) \
+                    or any(e.pins > 0 for _, e in self._retired):
                 # in-flight loads must publish first, else their handle
                 # would land in the pool (open fd) after close() returns
                 left = deadline - time.monotonic()
@@ -514,4 +621,7 @@ class WarmIndexPool:
             for name, e in list(self._entries.items()):
                 self._close_entry(name, e)
             self._entries.clear()
+            for name, e in self._retired:
+                e.index.close()          # centroids pool is cleared below
+            self._retired.clear()
             self._cents.clear()

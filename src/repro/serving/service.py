@@ -167,6 +167,16 @@ class RetrievalService:
             raise r.error
         return r
 
+    def swap(self, corpus: str, new_path: str,
+             share_centroids: bool = True) -> float:
+        """Zero-downtime version switch: repoint `corpus` at `new_path`
+        (e.g. a freshly compacted index) while this service keeps
+        serving.  Requests already leased onto the old version finish on
+        it; every later request sees the new one.  Returns the new
+        handle's load time in seconds (the paper's switch-time metric)."""
+        return self.pool.swap(corpus, new_path,
+                              share_centroids=share_centroids)
+
     # -- scheduling ----------------------------------------------------------
     def _pick_corpus(self) -> Optional[str]:
         """Next non-empty, non-busy corpus, round-robin (lock held)."""

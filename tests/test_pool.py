@@ -213,3 +213,98 @@ def test_index_switch_module_has_no_function_local_imports():
     body_src = inspect.getsource(pool_mod.WarmIndexPool)
     assert "import json" in src.split("class WarmIndexPool")[0]
     assert "import json" not in body_src
+
+
+# -- zero-downtime swap ------------------------------------------------------
+
+def test_swap_repoints_and_closes_idle_old(corpora_dirs):
+    pool = WarmIndexPool({"live": corpora_dirs["c0"]}, cache_bytes=CACHE)
+    pool.ensure("live")
+    old = pool.peek("live")
+    load_s = pool.swap("live", corpora_dirs["c1"])
+    assert load_s > 0
+    new = pool.peek("live")
+    assert new is not old and new.path == corpora_dirs["c1"]
+    assert old.fd == -1                      # idle old handle closed now
+    s = pool.stats()
+    assert s["swaps"] == 1 and s["retired"] == 0 and s["open"] == 1
+    pool.close()
+
+
+def test_swap_drains_inflight_lease_on_old_version(corpora_dirs):
+    """A lease taken before the swap keeps its (old) handle alive and
+    usable until IT releases; release closes the retired handle."""
+    pool = WarmIndexPool({"live": corpora_dirs["c0"]}, cache_bytes=CACHE)
+    old_idx, _ = pool.pin("live")
+    pool.swap("live", corpora_dirs["c1"])
+    assert pool.stats()["retired"] == 1
+    assert old_idx.fd >= 0                   # still open for its reader
+    q = np.zeros(old_idx.meta["dim"], np.float32)
+    ids, _ = old_idx.search(q, 3, L=16)      # old version still serves
+    assert len(ids) == 3
+    # new leases meanwhile land on the new version
+    with pool.lease("live") as (idx2, _):
+        assert idx2 is not old_idx
+    # identity-keyed release: the retired handle closes with its reader
+    pool.unpin("live", index=old_idx)
+    assert old_idx.fd == -1
+    assert pool.stats()["retired"] == 0
+    assert pool.peek("live").fd >= 0         # successor untouched
+    pool.close()
+
+
+def test_swap_shares_centroids_with_old_version(corpora_dirs):
+    """c0 and c1 share a centroid hash: the swapped-in handle must reuse
+    the pooled array, and retiring the old one must NOT drop it."""
+    pool = WarmIndexPool({"live": corpora_dirs["c0"]}, cache_bytes=CACHE)
+    pool.ensure("live")
+    cents_before = pool.centroid_bytes()
+    pool.swap("live", corpora_dirs["c1"])
+    assert pool.centroid_bytes() == cents_before
+    assert pool.stats()["centroid_shares"] >= 1
+    # the live handle's centroids are usable (not a dangling buffer)
+    q = np.zeros(pool.peek("live").meta["dim"], np.float32)
+    ids, _ = pool.peek("live").search(q, 3, L=16)
+    assert len(ids) == 3
+    pool.close()
+
+
+def test_swap_zero_dropped_requests(corpora_dirs):
+    """Searches hammer the corpus across repeated swaps: every request
+    completes with a full result set, none error or observe a closed
+    handle (the acceptance drill for the serving layer)."""
+    pool = WarmIndexPool({"live": corpora_dirs["c0"]}, cache_bytes=CACHE)
+    pool.ensure("live")
+    stop = threading.Event()
+    errors, served = [], [0] * 4
+
+    def hammer(slot):
+        rng = np.random.default_rng(slot)
+        while not stop.is_set():
+            try:
+                with pool.lease("live") as (idx, _):
+                    q = rng.standard_normal(
+                        idx.meta["dim"]).astype(np.float32)
+                    ids, _ = idx.search(q, 5, L=24)
+                    assert len(ids) == 5
+                    served[slot] += 1
+            except Exception as e:           # pragma: no cover
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for i in range(6):                   # ping-pong c0 <-> c1
+            pool.swap("live", corpora_dirs["c1" if i % 2 == 0 else "c0"])
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=20)
+    assert not errors, errors[0]
+    assert sum(served) > 0
+    s = pool.stats()
+    assert s["swaps"] == 6
+    pool.close()
+    assert pool.stats()["retired"] == 0      # every reader drained

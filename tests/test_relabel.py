@@ -159,10 +159,29 @@ def test_relabeled_device_loader_restores_original_space(relabeled_dirs):
                                   np.asarray(idx_r.chunk_words))
 
 
-def test_dynamic_index_refuses_relabeled(relabeled_dirs):
+def test_dynamic_index_accepts_relabeled(relabeled_dirs, tmp_path,
+                                         small_corpus):
+    """Streaming ingest understands relabeled dirs: inserts append fresh
+    labels past the original space and stay findable under them."""
+    import shutil
     from repro.core.dynamic import DynamicHostIndex
-    with pytest.raises(AssertionError):
-        DynamicHostIndex.load(relabeled_dirs[("aisaq", True)])
+    base, _, _ = small_corpus
+    dst = str(tmp_path / "rl_dyn")
+    shutil.copytree(relabeled_dirs[("aisaq", True)], dst)
+    idx = DynamicHostIndex.load(dst)
+    try:
+        assert idx.new_to_old is not None
+        n0 = idx.meta["n"]
+        rng = np.random.default_rng(0)
+        v = (base[0] + 0.05 * rng.standard_normal(base.shape[1])
+             ).astype(np.float32)
+        label = idx.insert(v)
+        assert label == n0                 # fresh, past the permutation
+        ids, _ = idx.search(v, 5, L=40)
+        assert label in ids.tolist()
+        idx.flush()
+    finally:
+        idx.close()
 
 
 # ---------------------------------------------------------------------------

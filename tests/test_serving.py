@@ -236,7 +236,7 @@ def test_service_corpora_serve_concurrently():
 
     pool = WarmIndexPool({"a": "/nonexistent-a", "b": "/nonexistent-b"})
     pool.pin = lambda name, share_centroids=True: (None, 0.0)  # no disk
-    pool.unpin = lambda name: None
+    pool.unpin = lambda name, index=None: None
     svc = RetrievalService(pool, num_workers=2, max_wait_ms=1.0,
                            search_fn=slow_fn)
     t0 = time.perf_counter()
