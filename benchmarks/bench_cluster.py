@@ -1,0 +1,444 @@
+"""Multi-process cluster drill: scaling sweep + kill-a-worker under load.
+
+Two sections, mirroring bench_faults' accounting discipline:
+
+  * SCALING — aggregate router QPS over a fixed corpus sharded 1/2/4
+    ways, one supervised worker process per shard.  The >=1.5x-at-4-
+    workers gate is enforced ONLY when >=4 CPUs are visible: the whole
+    point of the process tier is escaping the GIL, which requires cores
+    to escape to.  On smaller boxes the sweep still runs and the gate is
+    recorded as skipped with the reason — never silently passed.
+
+  * KILL DRILL — SIGKILL one worker mid-traffic (`core.faults.
+    ProcessKiller` armed on the live pid) and assert the failure
+    contract end to end: every request RESOLVES (completed full, clean
+    partial, or clean rejection — zero hangs, buckets sum exactly to
+    requests issued), every completed answer — full OR partial — is
+    bit-identical to a single-process reference merged over exactly the
+    shards that answered, and the supervisor's respawn restores full
+    bit-identical coverage.
+
+References come from `make_host_search_dist_fn` per shard folded by the
+same `core.shard_math.merge_topk` the router uses, so "bit-identical"
+is exact array equality, not a recall bound.
+
+    PYTHONPATH=src:. python benchmarks/bench_cluster.py          # full
+    PYTHONPATH=src:. python benchmarks/bench_cluster.py --quick  # CI smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core.faults import ProcessKiller
+from repro.core.shard_math import merge_topk
+from repro.serving.cluster import ShardCluster
+from repro.serving.router import (DegradedServiceError, ShardRouter,
+                                  SocketShardClient)
+
+SCHEMA_VERSION = 1
+K, L, W = 10, 32, 4
+TOTAL = 8000                 # full-mode corpus prefix, sharded 1/2/4 ways
+WORKER_COUNTS = (1, 2, 4)
+SWEEP_SECONDS = 4.0
+SWEEP_THREADS = 4
+DRILL_SHARDS = 4
+DRILL_REQUESTS = 240
+DRILL_THREADS = 4
+KILL_AT = 60                 # request tick that fires the SIGKILL
+SHARD_DEADLINE_S = 3.0
+HANG_BOUND_S = 12.0          # 2x(deadline+connect) + generous slack
+
+
+def cpu_count() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except (AttributeError, OSError):
+        return os.cpu_count() or 1
+
+
+# ---------------------------------------------------------------------------
+# single-process references
+# ---------------------------------------------------------------------------
+
+
+def per_shard_refs(shards, queries, *, k, L, w):
+    """(n_shards, nq, k) ids + dists from the same search the workers
+    run, computed in THIS process — the bit-identity bar."""
+    from repro.core.index_io import HostIndex
+    from repro.serving.engine import make_host_search_dist_fn
+    ids, dists = [], []
+    for corpora in shards:
+        idx = HostIndex.load(corpora["default"], cache_bytes=8 << 20)
+        i, d = make_host_search_dist_fn(idx, L=L, w=w)(queries, k)
+        ids.append(np.asarray(i))
+        dists.append(np.asarray(d))
+        idx.close()
+    return ids, dists
+
+
+def merged_ref(ref_ids, ref_dists, shard_set, qi, k):
+    """Reference answer for query `qi` over exactly `shard_set`."""
+    return merge_topk([ref_ids[s][qi] for s in shard_set],
+                      [ref_dists[s][qi] for s in shard_set], k)
+
+
+# ---------------------------------------------------------------------------
+# cluster + router plumbing
+# ---------------------------------------------------------------------------
+
+
+def start_cluster(shards, socket_dir, *, k_unused=None, L=L, w=W,
+                  cache_bytes=8 << 20, **kw):
+    cluster = ShardCluster(shards, socket_dir=socket_dir, L=L, w=w,
+                           cache_bytes=cache_bytes, **kw)
+    cluster.start()
+    eps = cluster.endpoints()
+    assert all(eps), f"cluster started with down shards: {eps}"
+    router = ShardRouter([SocketShardClient(p) for p in eps],
+                         min_shards=1, shard_deadline_s=SHARD_DEADLINE_S,
+                         endpoints_fn=cluster.endpoints)
+    return cluster, router
+
+
+# ---------------------------------------------------------------------------
+# scaling sweep
+# ---------------------------------------------------------------------------
+
+
+def bench_scaling(queries, *, k, total, worker_counts=WORKER_COUNTS,
+                  duration_s=SWEEP_SECONDS, n_threads=SWEEP_THREADS) -> dict:
+    """Aggregate QPS through the router at each worker count."""
+    from benchmarks import common as C
+    rows = {}
+    for n in worker_counts:
+        shards, _ = C.ensure_shard_indices(n, total=total)
+        with tempfile.TemporaryDirectory(prefix="clus-sweep") as sd:
+            cluster, router = start_cluster(shards, sd)
+            try:
+                for qi in range(min(8, len(queries))):      # warm caches
+                    router.search(queries[qi], k)
+                stop_at = time.monotonic() + duration_s
+                counts = [0] * n_threads
+                errors = [0] * n_threads
+
+                def pump(t):
+                    i = t
+                    while time.monotonic() < stop_at:
+                        try:
+                            r = router.search(queries[i % len(queries)], k)
+                            if not r.partial:
+                                counts[t] += 1
+                            else:
+                                errors[t] += 1
+                        except (DegradedServiceError, Exception):
+                            errors[t] += 1
+                        i += n_threads
+
+                t0 = time.perf_counter()
+                threads = [threading.Thread(target=pump, args=(t,))
+                           for t in range(n_threads)]
+                for th in threads:
+                    th.start()
+                for th in threads:
+                    th.join()
+                wall = time.perf_counter() - t0
+                rows[n] = dict(qps=sum(counts) / wall,
+                               completed=int(sum(counts)),
+                               degraded=int(sum(errors)), wall_s=wall)
+                print(f"[bench_cluster] {n} worker(s): "
+                      f"{rows[n]['qps']:.0f} qps "
+                      f"({rows[n]['completed']} full answers)")
+            finally:
+                router.close()
+                cluster.stop()
+    cpus = cpu_count()
+    out = dict(worker_counts=list(worker_counts), rows=rows, cpus=cpus)
+    if cpus >= 4 and 1 in rows and 4 in rows:
+        ratio = rows[4]["qps"] / rows[1]["qps"]
+        out["gate"] = dict(enforced=True, ratio=ratio,
+                           passed=bool(ratio >= 1.5))
+    else:
+        out["gate"] = dict(
+            enforced=False, passed=None,
+            reason=f"{cpus} CPU(s) visible; the 1.5x-at-4-workers gate "
+                   "needs >= 4 cores to be meaningful")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kill-a-worker drill
+# ---------------------------------------------------------------------------
+
+
+def run_kill_drill(shards, queries, *, k, L, w, n_requests, n_threads,
+                   kill_at, victim_shard, cache_bytes=8 << 20,
+                   respawn_queries=16, respawn_timeout_s=30.0) -> dict:
+    """SIGKILL `victim_shard` at the `kill_at`-th request; account for
+    every request; bit-check every completed answer against references
+    merged over exactly the shards that answered it.  Returns the full
+    accounting dict; raises nothing — callers assert via
+    `drill_failures` so full and quick share one body."""
+    ref_ids, ref_dists = per_shard_refs(shards, queries, k=k, L=L, w=w)
+    all_shards = range(len(shards))
+    with tempfile.TemporaryDirectory(prefix="clus-drill") as sd:
+        cluster, router = start_cluster(
+            shards, sd, L=L, w=w, cache_bytes=cache_bytes,
+            heartbeat_s=0.1, backoff_s=0.05, stable_s=2.0)
+        killer = ProcessKiller(at=kill_at)
+        killer.arm(lambda: cluster.pid(victim_shard))
+        records = []
+        rec_lock = threading.Lock()
+
+        def pump(t):
+            for j in range(t, n_requests, n_threads):
+                killer.tick()
+                qi = j % len(queries)
+                t0 = time.perf_counter()
+                try:
+                    r = router.search(queries[qi], k)
+                    rec = dict(qi=qi, outcome=("partial" if r.partial
+                                               else "full"),
+                               ids=r.ids, dists=r.dists,
+                               failed=list(r.failed_shards))
+                except DegradedServiceError:
+                    rec = dict(qi=qi, outcome="rejected")
+                except Exception as e:   # noqa: BLE001 — accounting drill
+                    rec = dict(qi=qi, outcome="other_error",
+                               err=f"{type(e).__name__}: {e}")
+                rec["latency_s"] = time.perf_counter() - t0
+                with rec_lock:
+                    records.append(rec)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=pump, args=(t,))
+                   for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        stream_wall = time.perf_counter() - t0
+
+        # --- verification pass: every completed answer vs the reference
+        # merged over exactly the shards that answered it
+        buckets = dict(full=0, partial=0, rejected=0, other_error=0)
+        mismatches, hung = 0, 0
+        max_latency = 0.0
+        for rec in records:
+            buckets[rec["outcome"]] += 1
+            max_latency = max(max_latency, rec["latency_s"])
+            if rec["latency_s"] > HANG_BOUND_S:
+                hung += 1
+            if rec["outcome"] in ("full", "partial"):
+                answered = [s for s in all_shards
+                            if s not in rec.get("failed", [])]
+                eids, edists = merged_ref(ref_ids, ref_dists, answered,
+                                          rec["qi"], k)
+                if not (np.array_equal(rec["ids"], eids)
+                        and np.array_equal(rec["dists"], edists)):
+                    mismatches += 1
+
+        # --- respawn: supervisor must restore full bit-identical coverage
+        recovered = cluster.wait_healthy(respawn_timeout_s)
+        respawn = dict(all_full=True, mismatches=0, n=respawn_queries)
+        if recovered:
+            for j in range(respawn_queries):
+                qi = j % len(queries)
+                try:
+                    r = router.search(queries[qi], k)
+                except (DegradedServiceError, Exception):
+                    respawn["all_full"] = False
+                    continue
+                if r.partial:
+                    respawn["all_full"] = False
+                    continue
+                eids, edists = merged_ref(ref_ids, ref_dists, all_shards,
+                                          qi, k)
+                if not (np.array_equal(r.ids, eids)
+                        and np.array_equal(r.dists, edists)):
+                    respawn["mismatches"] += 1
+        cstats = cluster.stats()
+        rstats = router.stats()
+        router.close()
+        cluster.stop()
+    return dict(
+        n_requests=n_requests,
+        n_threads=n_threads,
+        stream_wall_s=stream_wall,
+        victim_shard=victim_shard,
+        killed_pid=killer.killed_pid,
+        buckets=buckets,
+        accounted=int(sum(buckets.values())),
+        hung=hung,
+        max_latency_s=max_latency,
+        mismatches=mismatches,
+        bit_identical=mismatches == 0,
+        recovered=recovered,
+        respawn=respawn,
+        restarts=cstats["shards"][victim_shard]["restarts"],
+        quarantined=cstats["quarantined"],
+        router=rstats,
+        events=[e["what"] for e in cstats["events"]],
+    )
+
+
+def drill_failures(d: dict) -> list:
+    """The drill's pass/fail contract, shared by full and quick modes."""
+    fails = []
+    if d["killed_pid"] is None:
+        fails.append("ProcessKiller never fired — the drill killed nothing")
+    if d["accounted"] != d["n_requests"]:
+        fails.append(f"accounting leak: {d['accounted']} bucketed vs "
+                     f"{d['n_requests']} requests issued")
+    if d["hung"]:
+        fails.append(f"{d['hung']} request(s) exceeded the "
+                     f"{HANG_BOUND_S}s hang bound "
+                     f"(max {d['max_latency_s']:.1f}s)")
+    if d["buckets"]["other_error"]:
+        fails.append(f"unclean outcomes: {d['buckets']}")
+    if not d["bit_identical"]:
+        fails.append(f"{d['mismatches']} completed answer(s) differ from "
+                     "single-process references over the answering shards")
+    if d["router"]["shard_failures"] < 1:
+        fails.append("router never observed a shard failure — the kill "
+                     "landed outside traffic, drill proves nothing")
+    if not d["recovered"]:
+        fails.append("cluster never returned to healthy after the kill")
+    if d["restarts"] < 1:
+        fails.append("supervisor recorded no respawn of the victim")
+    if not d["respawn"]["all_full"] or d["respawn"]["mismatches"]:
+        fails.append(f"post-respawn coverage not restored: {d['respawn']}")
+    return fails
+
+
+# ---------------------------------------------------------------------------
+# full mode
+# ---------------------------------------------------------------------------
+
+
+def all_benchmarks():
+    from benchmarks import common as C
+    rows = []
+    report = {"schema_version": SCHEMA_VERSION,
+              "workload": dict(total=TOTAL, k=K, L=L, w=W,
+                               worker_counts=list(WORKER_COUNTS),
+                               drill_shards=DRILL_SHARDS,
+                               drill_requests=DRILL_REQUESTS,
+                               kill_at=KILL_AT)}
+    _, queries, _ = C.corpus()
+
+    report["scaling"] = sc = bench_scaling(queries, k=K, total=TOTAL)
+    for n, r in sc["rows"].items():
+        rows.append((f"cluster_qps_{n}w", r["qps"],
+                     f"completed={r['completed']}"))
+
+    shards, _ = C.ensure_shard_indices(DRILL_SHARDS, total=TOTAL)
+    report["drill"] = d = run_kill_drill(
+        shards, queries, k=K, L=L, w=W, n_requests=DRILL_REQUESTS,
+        n_threads=DRILL_THREADS, kill_at=KILL_AT,
+        victim_shard=DRILL_SHARDS // 2)
+    fails = drill_failures(d)
+    if sc["gate"]["enforced"] and not sc["gate"]["passed"]:
+        fails.append(f"scaling gate: {sc['gate']['ratio']:.2f}x at 4 "
+                     "workers < 1.5x")
+    report["drill"]["failures"] = fails
+    b = d["buckets"]
+    rows.append(("cluster_drill_accounted",
+                 d["accounted"] / d["n_requests"],
+                 f"full={b['full']}_partial={b['partial']}_"
+                 f"rejected={b['rejected']}"))
+    rows.append(("cluster_bit_identical", float(d["bit_identical"]),
+                 f"restarts={d['restarts']}_hung={d['hung']}"))
+    report["headline"] = dict(
+        drill_passed=not fails,
+        killed_pid=d["killed_pid"],
+        buckets=b,
+        hung=d["hung"],
+        bit_identical=d["bit_identical"],
+        recovered=d["recovered"],
+        restarts=d["restarts"],
+        scaling_gate=sc["gate"],
+        qps={str(n): r["qps"] for n, r in sc["rows"].items()})
+    dest = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_cluster.json")
+    with open(os.path.abspath(dest), "w") as f:
+        json.dump(report, f, indent=1, default=str)
+    print(f"[bench_cluster] wrote {os.path.abspath(dest)}")
+    if fails:
+        for msg in fails:
+            print(f"[bench_cluster] FAIL: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# CI smoke
+# ---------------------------------------------------------------------------
+
+
+def _tiny_shards(td: str, *, n_shards=2, per_shard=700, dim=32, m=8):
+    """Throwaway global-label shard indices in a tempdir (CI has no
+    artifact cache): one shared codebook, contiguous split, global ids
+    baked in via write_index(labels=...)."""
+    import jax
+    from repro.core import pq
+    from repro.core.index_io import write_index
+    from repro.core.shard_math import contiguous_shards
+    from repro.core.vamana import build_vamana
+    from repro.data.vectors import make_clustered, make_queries
+    base = make_clustered(n_shards * per_shard, dim, seed=0)
+    cb = pq.train_codebooks(jax.random.PRNGKey(0), base, m=m, iters=6)
+    cents, codes = np.asarray(cb.centroids), np.asarray(pq.encode(cb, base))
+    asn = contiguous_shards(len(base), n_shards)
+    shards = []
+    for s in range(n_shards):
+        lo, hi = asn.bounds(s)
+        g = build_vamana(base[lo:hi], R=12, L=24, seed=s)
+        p = os.path.join(td, f"shard{s}")
+        write_index(p, vectors=base[lo:hi], graph=g, centroids=cents,
+                    codes=codes[lo:hi], metric="l2", mode="aisaq",
+                    labels=np.arange(lo, hi, dtype=np.int64))
+        shards.append({"default": p})
+    return shards, make_queries(16, base, seed=9)
+
+
+def quick_smoke() -> int:
+    """CI smoke: the identical kill drill on 2 tiny tempdir shards.
+    Asserts the full failure contract — kill fired, zero hangs, exact
+    bucket accounting, bit-identity of every completed answer, respawn
+    restores full coverage.  The scaling sweep is skipped (CI boxes
+    rarely have the cores to make it meaningful)."""
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory(prefix="clus-quick") as td:
+        shards, queries = _tiny_shards(td)
+        drill = run_kill_drill(shards, queries, k=5, L=24, w=W,
+                               n_requests=80, n_threads=2, kill_at=25,
+                               victim_shard=1, cache_bytes=4 << 20,
+                               respawn_queries=8)
+        fails = drill_failures(drill)
+    wall = time.perf_counter() - t0
+    if fails:
+        for msg in fails:
+            print(f"[bench_cluster --quick] FAIL: {msg}", file=sys.stderr)
+        return 1
+    b = drill["buckets"]
+    print(f"[bench_cluster --quick] kill drill green ({wall:.1f}s): "
+          f"full={b['full']} partial={b['partial']} "
+          f"rejected={b['rejected']} hung={drill['hung']} "
+          f"bit_identical={drill['bit_identical']} "
+          f"restarts={drill['restarts']} "
+          f"retries={drill['router']['retries']}")
+    return 0
+
+
+if __name__ == "__main__":
+    if "--quick" in sys.argv[1:]:
+        sys.exit(quick_smoke())
+    for name, val, extra in all_benchmarks():
+        print(f"{name},{val:.3f},{extra}")

@@ -190,6 +190,56 @@ def ensure_subcorpora(n_sub=5, m=DEFAULT_M):
     return paths
 
 
+def ensure_shard_indices(n_shards: int, m: int = DEFAULT_M,
+                         total: int = N):
+    """Per-shard AiSAQ indices over a contiguous split of (a prefix of)
+    the cached corpus, for the multi-process cluster bench.
+
+    Uses `core.shard_math.contiguous_shards` — the SAME assignment the
+    device-mesh tier feeds `stack_shards` — and bakes each vector's
+    GLOBAL id into the index via `write_index(labels=...)`, so cluster
+    workers answer in global label space and the router merges without
+    any offset arithmetic.  One PQ codebook (trained on the whole
+    prefix) is shared by every shard, like the Table-4 sub-corpora.
+
+    Returns (shard corpora list — one {"default": path} per shard —
+    and the ShardAssignment)."""
+    import jax
+    from repro.core import pq
+    from repro.core.index_io import write_index
+    from repro.core.shard_math import contiguous_shards
+    from repro.core.vamana import build_vamana
+    base, _, _ = corpus()
+    base = base[:total]
+    asn = contiguous_shards(len(base), n_shards)
+    cache = {}
+    shards = []
+    for s in range(n_shards):
+        lo, hi = asn.bounds(s)
+        p = os.path.join(IDX, f"shard_{n_shards}x{total}_{s}")
+        shards.append({"default": p})
+        params = dict(fmt=FMT_VERSION,
+                      corpus=_params_hash(_corpus_params()),
+                      m=m, total=total, n_shards=n_shards, s=s,
+                      R=16, build_L=24, pq_iters=PQ_ITERS)
+        if os.path.exists(os.path.join(p, "meta.json")) \
+                and _stamp_ok(p, "build_params.json", params):
+            continue
+        shutil.rmtree(p, ignore_errors=True)
+        if "cents" not in cache:
+            cb = pq.train_codebooks(jax.random.PRNGKey(m), base, m=m,
+                                    iters=PQ_ITERS)
+            cache["cents"] = np.asarray(cb.centroids)
+            cache["codes"] = np.asarray(pq.encode(cb, base))
+        g = build_vamana(base[lo:hi], R=16, L=24, seed=s)
+        write_index(p, vectors=base[lo:hi], graph=g,
+                    centroids=cache["cents"], codes=cache["codes"][lo:hi],
+                    metric="l2", mode="aisaq",
+                    labels=np.arange(lo, hi, dtype=np.int64))
+        _write_stamp(p, "build_params.json", params)
+    return shards, asn
+
+
 def rss_mb() -> float:
     import psutil
     return psutil.Process().memory_info().rss / 1e6

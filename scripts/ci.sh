@@ -12,25 +12,40 @@
 # They deliberately do NOT touch benchmarks/artifacts/bench_idx — CI has
 # no artifact cache and must never pay the 20k-corpus index build; the
 # cached artifacts are only for full local bench runs.
+#
+# Every bench smoke runs under a HARD wall-clock timeout: a hung drill
+# (a wedged worker process, a lost socket frame) must fail fast and
+# loudly, not eat the job-level budget.  The workflow mirrors this with
+# per-step timeout-minutes.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+QUICK_TIMEOUT="${QUICK_TIMEOUT:-600}"   # seconds per bench smoke
+
+run_quick() {
+    PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+        timeout --signal=TERM --kill-after=30 "$QUICK_TIMEOUT" \
+        python "$1" --quick
+}
+
 bash scripts/tier1.sh
 
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/bench_search.py --quick
+run_quick benchmarks/bench_search.py
 
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/bench_serving.py --quick
+run_quick benchmarks/bench_serving.py
 
 # fault drill: seeded EIO + a transiently corrupt block against the full
 # serving stack — asserts zero worker deaths, 100% completion-or-clean-
 # rejection, quarantine + half-open recovery, and bit-identical answers
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/bench_faults.py --quick
+run_quick benchmarks/bench_faults.py
 
 # ingest drill: concurrent insert+search, a zero-downtime compaction swap
 # under load, and the kill-at-every-journal-offset crash drill — asserts
 # 100% recovery to oracle-identical search results at every crash point
-PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/bench_ingest.py --quick
+run_quick benchmarks/bench_ingest.py
+
+# cluster drill: SIGKILL a shard worker process mid-traffic — asserts
+# zero hung requests, exact outcome accounting, completed answers
+# bit-identical to single-process references over the answering shards,
+# and supervisor respawn restoring full coverage
+run_quick benchmarks/bench_cluster.py

@@ -443,8 +443,13 @@ class DynamicHostIndex(HostIndex):
         and the journal is only truncated after the checkpoint flush."""
         records, valid_end, torn = self.wal.scan()
         stats = dict(journaled=len(records), torn=bool(torn),
+                     truncated_bytes=0,
                      rolled_back=0, rolled_forward=0, deletes=0)
         if torn:
+            # bytes of torn tail dropped from the journal — serving
+            # telemetry (WarmIndexPool.stats()["recoveries"]) surfaces
+            # this so operators see how much of a crash was unwound
+            stats["truncated_bytes"] = max(0, self.wal.size - valid_end)
             self.wal.truncate(valid_end)
         if not records:
             return stats

@@ -47,10 +47,11 @@ from __future__ import annotations
 import errno
 import hashlib
 import os
+import signal
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 
 class CrashPoint(Exception):
@@ -198,3 +199,159 @@ class FaultInjector:
                         injected_short=self.injected_short,
                         injected_latency=self.injected_latency,
                         injected_corrupt=self.injected_corrupt)
+
+
+# ---------------------------------------------------------------------------
+# process-level crash injection (the cluster tier's KillSwitch)
+# ---------------------------------------------------------------------------
+
+
+class ProcessKiller:
+    """SIGKILL a chosen worker PROCESS at a deterministic tick.
+
+    The cluster drill's twin of ``KillSwitch``: the drill loop calls
+    ``tick()`` once per routed request, and at the ``at``-th tick the
+    armed pid receives SIGKILL — no warning, no cleanup, exactly the
+    failure a hardware fault or the OOM killer delivers.  ``arm`` takes
+    a pid or a zero-arg callable resolving to one at fire time (the
+    supervisor may have respawned the worker since arming, so the
+    drill kills whoever owns the slot WHEN the tick lands).
+
+    Thread-safe: concurrent router threads may tick; exactly one fires.
+    """
+
+    def __init__(self, at: Optional[int] = None,
+                 sig: int = signal.SIGKILL):
+        self.at = at
+        self.sig = sig
+        self.count = 0
+        self.fired = False
+        self.killed_pid: Optional[int] = None
+        self._victim: Optional[Callable[[], Optional[int]]] = None
+        self._lock = threading.Lock()
+
+    def arm(self, victim) -> "ProcessKiller":
+        """``victim``: a pid (int) or a zero-arg callable -> pid/None."""
+        with self._lock:
+            self._victim = victim if callable(victim) \
+                else (lambda pid=int(victim): pid)
+        return self
+
+    def tick(self) -> bool:
+        """Count one drill event; fire at the configured tick.  Returns
+        True iff THIS call delivered the signal."""
+        with self._lock:
+            self.count += 1
+            if (self.at is None or self.fired or self._victim is None
+                    or self.count < self.at):
+                return False
+            self.fired = True
+            pid = self._victim()
+        if pid is None:
+            return False
+        try:
+            os.kill(pid, self.sig)
+        except ProcessLookupError:
+            return False                 # already dead: the drill still ran
+        self.killed_pid = pid
+        return True
+
+
+# ---------------------------------------------------------------------------
+# socket-level fault shims (the wire's FaultInjector)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SocketFaultPlan:
+    """Deterministic fault schedule for one wrapped connection.  All
+    rates are per-operation draws keyed by ``hash(seed, op, call#)`` —
+    reconnecting resets the call counter, so a retry sees a fresh
+    schedule exactly like ``FaultInjector``'s per-attempt draws."""
+    seed: int = 0
+    corrupt_rate: float = 0.0     # flip one bit in the bytes that flow
+    drop_rate: float = 0.0        # sever the connection instead of serving
+    delay_rate: float = 0.0       # sleep before serving
+    delay_s: float = 0.002
+    max_faults: Optional[int] = None
+
+
+class FlakySocket:
+    """Wraps a connected socket with the plan's deterministic faults.
+
+    ``sendall``/``recv`` may (a) raise ``ConnectionResetError`` and close
+    the underlying socket (severed wire), (b) flip one bit in the bytes
+    that pass (the framed protocol's CRC must catch it), or (c) sleep
+    (congestion).  Everything else proxies through, so the shim drops
+    into ``serving.protocol`` helpers and router clients unchanged."""
+
+    def __init__(self, sock, plan: SocketFaultPlan):
+        self._sock = sock
+        self.plan = plan
+        self._calls = 0
+        self._lock = threading.Lock()
+        self.injected_corrupt = 0
+        self.injected_drop = 0
+        self.injected_delay = 0
+
+    # -- deterministic draws -------------------------------------------------
+    def _u(self, kind: str, call: int) -> float:
+        h = hashlib.blake2b(
+            f"{self.plan.seed}:{kind}:{call}".encode(),
+            digest_size=8).digest()
+        return int.from_bytes(h, "big") / 2.0 ** 64
+
+    def _draw(self):
+        """(corrupt, drop, delay) for this call, honoring max_faults."""
+        p = self.plan
+        with self._lock:
+            call = self._calls
+            self._calls += 1
+            injected = (self.injected_corrupt + self.injected_drop
+                        + self.injected_delay)
+            if p.max_faults is not None and injected >= p.max_faults:
+                return False, False, False
+            corrupt = self._u("corrupt", call) < p.corrupt_rate
+            drop = self._u("drop", call) < p.drop_rate
+            delay = self._u("delay", call) < p.delay_rate
+            self.injected_corrupt += corrupt
+            self.injected_drop += drop
+            self.injected_delay += delay
+            return corrupt, drop, delay
+
+    def _flip(self, data: bytes, call: int) -> bytes:
+        if not data:
+            return data
+        pos = int(self._u("pos", call) * len(data)) % len(data)
+        b = bytearray(data)
+        b[pos] ^= 1 << (call % 8)
+        return bytes(b)
+
+    # -- the shimmed surface -------------------------------------------------
+    def sendall(self, data: bytes):
+        corrupt, drop, delay = self._draw()
+        if delay:
+            time.sleep(self.plan.delay_s)
+        if drop:
+            self._sock.close()
+            raise ConnectionResetError(errno.ECONNRESET,
+                                       "injected wire drop (send)")
+        if corrupt:
+            data = self._flip(data, self._calls)
+        return self._sock.sendall(data)
+
+    def recv(self, n: int) -> bytes:
+        corrupt, drop, delay = self._draw()
+        if delay:
+            time.sleep(self.plan.delay_s)
+        if drop:
+            self._sock.close()
+            raise ConnectionResetError(errno.ECONNRESET,
+                                       "injected wire drop (recv)")
+        data = self._sock.recv(n)
+        if corrupt and data:
+            data = self._flip(data, self._calls)
+        return data
+
+    def __getattr__(self, name):
+        return getattr(self._sock, name)

@@ -14,6 +14,15 @@ lives in the three-layer core (``core.adc`` numerics, ``core.traversal``
 pipelined beam engine, ``core.index_io`` format/lifecycle); per-shard
 device search has no storage pipeline to overlap, so the host-only
 ``pipeline=``/``prefetch=`` knobs do not appear here.
+
+The shard MATH — which vector belongs to which shard, and how partial
+per-shard top-k lists merge — is shared with the process-level storage
+tier (``serving.cluster`` / ``serving.router``) via ``core.shard_math``:
+``ShardAssignment`` / ``contiguous_shards`` produce the same
+(offset, count) splits ``stack_shards`` consumes here, and
+``merge_topk`` is the host twin of this module's all-gather +
+``lax.top_k`` merge.  They are re-exported below so either tier can
+import them from either module.
 """
 from __future__ import annotations
 
@@ -28,6 +37,8 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.chunk_layout import ChunkLayout
 from repro.core.device_index import DeviceIndex, beam_search_device
+from repro.core.shard_math import (          # noqa: F401  (re-exported)
+    ShardAssignment, contiguous_shards, merge_topk)
 
 
 class ShardedIndexArrays(NamedTuple):

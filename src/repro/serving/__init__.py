@@ -1,17 +1,33 @@
-"""Serving layer: batching engine, warm-index pool, multi-tenant service.
+"""Serving layer: batching engine, warm-index pool, multi-tenant service,
+and the multi-process cluster tier.
 
   engine   — `ServingEngine` (single-loop batching + hedging) and the
-             `make_host_search_fn` / `make_device_search_fn` factories
+             `make_host_search_fn` / `make_device_search_fn` /
+             `make_host_search_dist_fn` factories
   pool     — `WarmIndexPool`, the byte-budgeted LRU of open HostIndex
              handles with shared-centroid dedup and pin/unpin
   service  — `RetrievalService`, per-corpus queues + concurrent workers +
              admission control over a pool
+  protocol — length-prefixed CRC-framed wire format (Unix sockets)
+  cluster  — `ShardCluster`, a supervisor spawning one worker process
+             per shard with heartbeats / backoff respawn / quarantine
+  router   — `ShardRouter`, scatter-gather with partial-result
+             degradation over `ShardClient` transports
+
+This package's import chain is deliberately jax-free so spawned cluster
+workers start in fractions of a second; `cluster`/`router` are imported
+lazily here for the same reason plus to keep optional deps optional.
 """
 from repro.serving.engine import (Request, ServingEngine,
-                                  make_device_search_fn, make_host_search_fn)
+                                  exact_distances, make_device_search_fn,
+                                  make_host_search_dist_fn,
+                                  make_host_search_fn)
 from repro.serving.pool import CorpusUnhealthyError, WarmIndexPool
-from repro.serving.service import BackpressureError, RetrievalService
+from repro.serving.service import (BackpressureError, RetrievalService,
+                                   ServiceClosedError)
 
 __all__ = ["Request", "ServingEngine", "make_device_search_fn",
-           "make_host_search_fn", "WarmIndexPool", "BackpressureError",
-           "CorpusUnhealthyError", "RetrievalService"]
+           "make_host_search_fn", "make_host_search_dist_fn",
+           "exact_distances", "WarmIndexPool", "BackpressureError",
+           "CorpusUnhealthyError", "ServiceClosedError",
+           "RetrievalService"]

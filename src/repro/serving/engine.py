@@ -113,6 +113,66 @@ def make_host_search_fn(host_index, *, L: int = 48, w: int = 4,
     return search
 
 
+def exact_distances(host_index, queries: np.ndarray, ids: np.ndarray
+                    ) -> np.ndarray:
+    """Exact f32 distances (metric from meta.json) for result LABELS.
+
+    The cluster's scatter-gather merge needs scores comparable across
+    shards; per-shard PQ-approximate distances are not (each shard has
+    its own traversal state), so shard workers rescore their answers
+    exactly.  Same formula as the exact rerank tail
+    (``core.traversal._rerank_tail_ref``) — cluster answers and
+    single-process references score candidates bit-identically.
+    Padding ids (< 0) map to +inf.
+    """
+    from repro.core.chunk_layout import parse_chunk
+    from repro.core.traversal import SearchStats
+
+    lut = getattr(host_index, "_label_to_storage", None)
+    if lut is None:
+        n2o = host_index.new_to_old
+        lut = {} if n2o is None else \
+            {int(lab): i for i, lab in enumerate(n2o)}
+        host_index._label_to_storage = lut  # memoized; index is immutable
+    metric = host_index.meta["metric"]
+    st = SearchStats()
+    ids = np.asarray(ids)
+    out = np.full(ids.shape, np.inf, dtype=np.float32)
+    for i in range(ids.shape[0]):
+        qf = np.asarray(queries[i], dtype=np.float32)
+        for j in range(ids.shape[1]):
+            lab = int(ids[i, j])
+            if lab < 0:
+                continue
+            node = lut.get(lab, lab) if lut else lab
+            raw = host_index._read_chunk(node, st)
+            vec, _, _ = parse_chunk(raw, host_index.layout)
+            vf = vec.astype(np.float32)
+            out[i, j] = -(vf @ qf) if metric == "mips" \
+                else ((vf - qf) ** 2).sum()
+    return out
+
+
+def make_host_search_dist_fn(host_index, *, L: int = 48, w: int = 4,
+                             prefetch: int = 0, adc_dtype: str = "f32",
+                             rerank: Optional[int] = None,
+                             pipeline: Optional[bool] = None,
+                             gap=None):
+    """`(queries, k) -> (ids, dists)` twin of `make_host_search_fn`: the
+    same search plus exact distances for the cross-shard merge.  This is
+    the search callable cluster shard workers install on their
+    `RetrievalService` (whose `_serve` accepts tuple returns)."""
+    base = make_host_search_fn(host_index, L=L, w=w, prefetch=prefetch,
+                               adc_dtype=adc_dtype, rerank=rerank,
+                               pipeline=pipeline, gap=gap)
+
+    def search(queries: np.ndarray, k: int):
+        ids = base(queries, k)
+        return ids, exact_distances(host_index, queries, ids)
+
+    return search
+
+
 @dataclass
 class Request:
     query: np.ndarray
@@ -120,6 +180,10 @@ class Request:
     k: int = 10
     t_submit: float = field(default_factory=time.perf_counter)
     result: Optional[np.ndarray] = None
+    # exact distances for `result`, set when the search_fn returns an
+    # (ids, dists) pair (cluster shard workers do: the scatter-gather
+    # merge needs comparable scores across shards)
+    dists: Optional[np.ndarray] = None
     t_done: float = 0.0
     event: threading.Event = field(default_factory=threading.Event)
     error: Optional[Exception] = None    # set instead of result on failure

@@ -40,6 +40,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.index_io import HostIndex
+from repro.core.wal import WAL_NAME
 
 
 class CorpusUnhealthyError(RuntimeError):
@@ -148,6 +149,11 @@ class WarmIndexPool:
         # Excluded from the LRU and the byte budget — a retired handle is
         # transient by construction (bounded by in-flight search latency).
         self._retired: List[Tuple[str, _Entry]] = []
+        # post-crash journal recoveries performed at open time, by corpus:
+        # the DynamicHostIndex.load stats dict (rolled_back /
+        # rolled_forward / truncated_bytes ...), surfaced via stats() so
+        # operators see crash recoveries in serving telemetry
+        self._recoveries: Dict[str, dict] = {}
 
     # -- registration --------------------------------------------------------
     def register(self, name: str, path: str):
@@ -186,6 +192,52 @@ class WarmIndexPool:
             return int(sum(a.nbytes for a, _ in self._cents.values()))
 
     # -- open / evict --------------------------------------------------------
+    def _peek_shared(self, path: str, share_centroids: bool):
+        """Pooled centroid array matching `path`'s meta hash, or None.
+        Unreadable/corrupt meta just skips sharing — the real load below
+        raises the typed CorruptIndexError."""
+        if not share_centroids:
+            return None
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                peek_hash = json.load(f).get("centroids_hash")
+        except (OSError, ValueError, AttributeError):
+            peek_hash = None
+        if peek_hash is None:
+            return None
+        with self._lock:
+            if peek_hash in self._cents:
+                return self._cents[peek_hash][0]
+        return None
+
+    def _load_handle(self, name: str, path: str, shared) -> HostIndex:
+        """Open one index handle (called OUTSIDE the pool lock).
+
+        A directory carrying a non-empty write-ahead journal means the
+        previous writer crashed mid-mutation; `HostIndex.load` refuses
+        it, so the pool routes through `DynamicHostIndex.load`, which
+        recovers (rollback / roll-forward / torn-tail truncation) before
+        serving.  The recovery outcome is remembered per corpus and
+        surfaced in `stats()["recoveries"]` — a post-crash restart shows
+        up in serving telemetry, not just in the worker's local log."""
+        preadv = self.preadv_factory(name) if self.preadv_factory else None
+        wal_path = os.path.join(path, WAL_NAME)
+        try:
+            pending = os.path.getsize(wal_path) > 0
+        except OSError:
+            pending = False
+        if pending:
+            from repro.core.dynamic import DynamicHostIndex
+            idx = DynamicHostIndex.load(path, mode=self.mode,
+                                        shared_centroids=shared,
+                                        cache_bytes=self.cache_bytes,
+                                        preadv=preadv)
+            with self._lock:
+                self._recoveries[name] = dict(idx.recovery)
+            return idx
+        return HostIndex.load(path, mode=self.mode, shared_centroids=shared,
+                              cache_bytes=self.cache_bytes, preadv=preadv)
+
     def _acquire(self, name: str, share_centroids: bool, do_pin: bool
                  ) -> Tuple[HostIndex, float]:
         """Hit-or-load a handle.  The disk I/O of a cold load runs OUTSIDE
@@ -219,25 +271,8 @@ class WarmIndexPool:
             self.misses += 1
         try:
             t0 = time.perf_counter()
-            shared = None
-            if share_centroids:
-                try:
-                    with open(os.path.join(path, "meta.json")) as f:
-                        peek_hash = json.load(f).get("centroids_hash")
-                except (OSError, ValueError, AttributeError):
-                    # unreadable/corrupt meta: the real load below raises
-                    # the typed CorruptIndexError; the peek just skips
-                    # centroid sharing
-                    peek_hash = None
-                if peek_hash is not None:
-                    with self._lock:
-                        if peek_hash in self._cents:
-                            shared = self._cents[peek_hash][0]
-            idx = HostIndex.load(path, mode=self.mode,
-                                 shared_centroids=shared,
-                                 cache_bytes=self.cache_bytes,
-                                 preadv=(self.preadv_factory(name)
-                                         if self.preadv_factory else None))
+            shared = self._peek_shared(path, share_centroids)
+            idx = self._load_handle(name, path, shared)
             load_s = time.perf_counter() - t0
         except BaseException:
             with self._lock:
@@ -407,22 +442,8 @@ class WarmIndexPool:
             self.paths[name] = new_path
         try:
             t0 = time.perf_counter()
-            shared = None
-            if share_centroids:
-                try:
-                    with open(os.path.join(new_path, "meta.json")) as f:
-                        peek_hash = json.load(f).get("centroids_hash")
-                except (OSError, ValueError, AttributeError):
-                    peek_hash = None
-                if peek_hash is not None:
-                    with self._lock:
-                        if peek_hash in self._cents:
-                            shared = self._cents[peek_hash][0]
-            idx = HostIndex.load(new_path, mode=self.mode,
-                                 shared_centroids=shared,
-                                 cache_bytes=self.cache_bytes,
-                                 preadv=(self.preadv_factory(name)
-                                         if self.preadv_factory else None))
+            shared = self._peek_shared(new_path, share_centroids)
+            idx = self._load_handle(name, new_path, shared)
             load_s = time.perf_counter() - t0
         except BaseException:
             with self._lock:
@@ -559,9 +580,51 @@ class WarmIndexPool:
 
     # -- stats / lifecycle ---------------------------------------------------
     def stats(self) -> dict:
+        """One CONSISTENT snapshot of the pool, taken in a single pass
+        under the pool lock.  Every per-handle figure (bytes charged,
+        cache counters, pins) is read from ONE capture of the entry
+        table, and each handle's counters come from one
+        `CacheCounters.snapshot()` call — a `swap` racing this method
+        sees either the old handle's report or the new one's, never a
+        row mixing both, and a handle's counter row is internally
+        coherent rather than attributes sampled at different instants."""
         with self._lock:
+            entries = list(self._entries.items())
+            cent_bytes = int(sum(a.nbytes for a, _ in self._cents.values()))
+            used = cent_bytes
+            caches = {}
+            pinned = {}
+            for n, e in entries:
+                used += self._entry_bytes(e)
+                if e.pins:
+                    pinned[n] = e.pins
+                cache = e.index.cache
+                if cache is None:
+                    continue
+                # per-handle I/O-engine telemetry: each open handle's
+                # block cache carries the pipelined-traversal counters
+                # (demand vs background syscalls, speculation accounting,
+                # the histogram-chosen readahead gap) — surfaced here so
+                # a multi-tenant operator sees which corpus is I/O-bound
+                (hits, misses, _evic, syscalls, _bytes, _fetch,
+                 _pf_issued, pf_syscalls, _pf_bytes, pf_hits, pf_wasted,
+                 pf_errors, auto_gap, retries, crc_mm, crc_rr) = \
+                    cache.counters.snapshot()
+                total = hits + misses
+                caches[n] = dict(
+                    hit_rate=float(hits) / total if total else 0.0,
+                    demand_syscalls=syscalls,
+                    prefetch_syscalls=pf_syscalls,
+                    prefetch_hits=pf_hits,
+                    prefetch_wasted=pf_wasted,
+                    prefetch_errors=pf_errors,
+                    auto_gap=auto_gap,
+                    read_retries=retries,
+                    crc_mismatches=crc_mm,
+                    crc_rereads=crc_rr,
+                )
             return dict(
-                open=len(self._entries),
+                open=len(entries),
                 registered=len(self.paths),
                 hits=self.hits,
                 misses=self.misses,
@@ -571,36 +634,21 @@ class WarmIndexPool:
                 strict_waits=self.strict_waits,
                 swaps=self.swaps,
                 retired=len(self._retired),
-                used_bytes=self.used_bytes(),
+                used_bytes=int(used),
                 budget_bytes=self.budget_bytes,
                 max_open=self.max_open,
-                centroid_bytes=self.centroid_bytes(),
-                pinned={n: e.pins for n, e in self._entries.items()
-                        if e.pins},
-                # per-handle I/O-engine telemetry: each open handle's block
-                # cache carries the pipelined-traversal counters (demand vs
-                # background syscalls, speculation accounting, the
-                # histogram-chosen readahead gap) — surfaced here so a
-                # multi-tenant operator sees which corpus is I/O-bound
-                caches={n: dict(
-                    hit_rate=e.index.cache.hit_rate(),
-                    demand_syscalls=e.index.cache.counters.syscalls,
-                    prefetch_syscalls=e.index.cache.counters
-                    .prefetch_syscalls,
-                    prefetch_hits=e.index.cache.counters.prefetch_hits,
-                    prefetch_wasted=e.index.cache.counters.prefetch_wasted,
-                    prefetch_errors=e.index.cache.counters.prefetch_errors,
-                    auto_gap=e.index.cache.counters.auto_gap,
-                    read_retries=e.index.cache.counters.read_retries,
-                    crc_mismatches=e.index.cache.counters.crc_mismatches,
-                    crc_rereads=e.index.cache.counters.crc_rereads,
-                ) for n, e in self._entries.items()
-                    if e.index.cache is not None},
+                centroid_bytes=cent_bytes,
+                pinned=pinned,
+                caches=caches,
                 health={n: dict(state=h.state,
                                 consec_failures=h.consec_failures,
                                 quarantines=h.quarantines,
                                 recoveries=h.recoveries)
                         for n, h in self._health.items()},
+                # journal recoveries performed at open time (see
+                # _load_handle): corpus -> DynamicHostIndex.load stats
+                recoveries={n: dict(r)
+                            for n, r in self._recoveries.items()},
             )
 
     def close(self, timeout: float = 5.0):

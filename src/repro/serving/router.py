@@ -1,0 +1,325 @@
+"""Scatter-gather shard router with explicit partial-result degradation.
+
+One query fans out to every shard, each shard answers its local top-k
+with EXACT distances, and `core.shard_math.merge_topk` folds the partial
+lists into a global top-k — the same merge the device mesh performs with
+all-gather + `lax.top_k`, so a full-coverage routed answer is
+bit-identical to a single-process reference over the same shards.
+
+Failure is a first-class outcome, with a strict contract:
+
+  * NEVER HANG — every shard attempt carries `shard_deadline_s`; a
+    worker that doesn't answer in time counts as failed for this query,
+  * NEVER SILENTLY SHORT — a result that lacks any shard's coverage is
+    flagged `partial=True` with `shards_answered`/`shards_failed`
+    telemetry; the caller decides whether a partial answer is
+    acceptable, the router never passes one off as complete,
+  * one HEDGED RETRY — a failed shard gets exactly one more attempt
+    against a freshly resolved endpoint (the supervisor may have
+    respawned the worker since the first try); retry storms are capped
+    by construction,
+  * QUORUM — fewer than `min_shards` answers raises the typed
+    `DegradedServiceError` (a clean rejection, distinguishable from
+    both success and partial success).
+
+`ShardClient` is the transport abstraction: `SocketShardClient` speaks
+the CRC-framed protocol to cluster workers (one connection per router
+thread — connections are not multiplexed, parallelism comes from
+threads); `LocalShardClient` wraps any in-process callable, which is how
+the single-process reference for drills and the DEVICE-tier per-shard
+search mount under the same router.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.shard_math import merge_topk
+from repro.serving import protocol as proto
+
+__all__ = ["ShardUnavailableError", "DegradedServiceError", "ShardClient",
+           "SocketShardClient", "LocalShardClient", "RouterResult",
+           "ShardRouter"]
+
+
+class ShardUnavailableError(RuntimeError):
+    """One shard attempt failed (connect/timeout/protocol/worker error).
+    Router-internal: surfaces to callers only in aggregate, as partial
+    results or DegradedServiceError."""
+
+
+class DegradedServiceError(RuntimeError):
+    """Fewer than `min_shards` shards answered — the router rejects the
+    query cleanly rather than return an answer below quorum."""
+
+    def __init__(self, answered: int, total: int, min_shards: int):
+        super().__init__(
+            f"only {answered}/{total} shards answered "
+            f"(quorum min_shards={min_shards})")
+        self.answered = answered
+        self.total = total
+        self.min_shards = min_shards
+
+
+class ShardClient:
+    """Transport to one shard: `search` returns (ids, dists) or raises
+    ShardUnavailableError.  Implementations must be thread-safe."""
+
+    def search(self, query: np.ndarray, k: int, *, corpus: str = "default",
+               deadline_s: Optional[float] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def reset(self):
+        """Drop cached transport state (e.g. reconnect after a respawn)."""
+
+    def close(self):
+        pass
+
+
+class SocketShardClient(ShardClient):
+    """CRC-framed protocol client over a Unix socket.
+
+    Connections are per-thread (`threading.local`): the worker serves
+    one connection sequentially, so router-side parallelism maps each
+    scatter thread to its own connection.  Any transport or protocol
+    failure closes the connection (a framed stream cannot resync past
+    corruption) and raises ShardUnavailableError; the next call
+    reconnects — which is exactly what a hedged retry to a respawned
+    worker needs."""
+
+    def __init__(self, socket_path: str, *,
+                 connect_timeout_s: float = 1.0):
+        self.socket_path = socket_path
+        self.connect_timeout_s = connect_timeout_s
+        self._tls = threading.local()
+        self._epoch = 0                # bumped by reset(): force reconnect
+        self._next_id = 0
+        self._id_lock = threading.Lock()
+
+    def _conn(self, deadline_s: Optional[float]) -> socket.socket:
+        tls = self._tls
+        if getattr(tls, "sock", None) is None \
+                or getattr(tls, "epoch", -1) != self._epoch:
+            self._drop()
+            s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            s.settimeout(self.connect_timeout_s)
+            s.connect(self.socket_path)
+            tls.sock = s
+            tls.epoch = self._epoch
+        tls.sock.settimeout(deadline_s)
+        return tls.sock
+
+    def _drop(self):
+        s = getattr(self._tls, "sock", None)
+        if s is not None:
+            try:
+                s.close()
+            except OSError:
+                pass
+        self._tls.sock = None
+
+    def _req_id(self) -> int:
+        with self._id_lock:
+            self._next_id += 1
+            return self._next_id
+
+    def search(self, query, k, *, corpus="default", deadline_s=None):
+        rid = self._req_id()
+        try:
+            sock = self._conn(deadline_s)
+            h, b = proto.encode_query(np.asarray(query), corpus=corpus,
+                                      k=k, req_id=rid,
+                                      deadline_s=deadline_s)
+            proto.send_frame(sock, proto.T_SEARCH, h, b)
+            rtype, header, blob = proto.recv_frame(sock)
+        except (proto.ProtocolError, OSError, socket.timeout) as e:
+            self._drop()
+            raise ShardUnavailableError(
+                f"{self.socket_path}: {type(e).__name__}: {e}") from e
+        if rtype == proto.T_ERROR:
+            # worker answered with a typed rejection — the connection is
+            # still good, only this request failed
+            raise ShardUnavailableError(
+                f"{self.socket_path}: worker error "
+                f"{header.get('etype')}: {header.get('msg')}")
+        if rtype != proto.T_RESULT or header.get("req_id") != rid:
+            self._drop()               # desynchronized: poison the conn
+            raise ShardUnavailableError(
+                f"{self.socket_path}: unexpected frame type {rtype}")
+        try:
+            return proto.decode_result(header, blob)
+        except proto.ProtocolError as e:
+            self._drop()
+            raise ShardUnavailableError(str(e)) from e
+
+    def reset(self):
+        self._epoch += 1               # every thread reconnects lazily
+
+    def close(self):
+        self._drop()
+
+
+class LocalShardClient(ShardClient):
+    """In-process shard: wraps `fn(query, k) -> (ids, dists)`.
+
+    Mounts anything callable under the router — the single-process
+    reference in drills, a device-tier per-shard search, a stub in
+    tests.  Exceptions map to ShardUnavailableError like a dead
+    worker's socket would."""
+
+    def __init__(self, fn: Callable, name: str = "local"):
+        self.fn = fn
+        self.name = name
+
+    def search(self, query, k, *, corpus="default", deadline_s=None):
+        try:
+            ids, dists = self.fn(np.asarray(query), k)
+            return np.asarray(ids, np.int64), np.asarray(dists, np.float32)
+        except Exception as e:         # noqa: BLE001 — any local failure
+            raise ShardUnavailableError(
+                f"{self.name}: {type(e).__name__}: {e}") from e
+
+
+@dataclass
+class RouterResult:
+    """One routed answer with its coverage telemetry."""
+    ids: np.ndarray                    # (k,) global labels, -1 padding
+    dists: np.ndarray                  # (k,) exact f32, +inf padding
+    partial: bool                      # True: >=1 shard missing
+    shards_answered: int
+    shards_failed: int
+    failed_shards: List[int] = field(default_factory=list)
+    retried_shards: List[int] = field(default_factory=list)
+    latency_s: float = 0.0
+
+
+class ShardRouter:
+    """Scatter-gather over a fixed shard set.
+
+    `clients`: one ShardClient per shard (index = shard id).
+    `endpoints_fn`: optional `() -> [socket_path | None per shard]`
+    (e.g. `ShardCluster.endpoints`) consulted before the hedged retry so
+    the retry targets the CURRENT worker, not the corpse the first
+    attempt hit; shards currently reported None skip their retry (no
+    point knocking on a quarantined door).
+    """
+
+    def __init__(self, clients: Sequence[ShardClient], *,
+                 min_shards: int = 1,
+                 shard_deadline_s: float = 2.0,
+                 hedge_retry: bool = True,
+                 endpoints_fn: Optional[Callable[[], List[Optional[str]]]]
+                 = None):
+        if not clients:
+            raise ValueError("router needs at least one shard client")
+        self.clients = list(clients)
+        self.min_shards = int(min_shards)
+        if not 1 <= self.min_shards <= len(self.clients):
+            raise ValueError(
+                f"min_shards={min_shards} outside [1, {len(self.clients)}]")
+        self.shard_deadline_s = float(shard_deadline_s)
+        self.hedge_retry = hedge_retry
+        self.endpoints_fn = endpoints_fn
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(2, len(self.clients)),
+            thread_name_prefix="router-scatter")
+        self._lock = threading.Lock()
+        self._tel = dict(queries=0, full=0, partial=0, rejected=0,
+                         shard_attempts=0, shard_failures=0, retries=0,
+                         retry_successes=0)
+
+    # -- per-shard attempt ---------------------------------------------------
+    def _ask(self, shard: int, query, k, corpus
+             ) -> Tuple[Optional[Tuple[np.ndarray, np.ndarray]], bool]:
+        """One shard's answer with up to one hedged retry.
+        Returns ((ids, dists) | None, retried)."""
+        client = self.clients[shard]
+        with self._lock:
+            self._tel["shard_attempts"] += 1
+        try:
+            return client.search(query, k, corpus=corpus,
+                                 deadline_s=self.shard_deadline_s), False
+        except ShardUnavailableError:
+            with self._lock:
+                self._tel["shard_failures"] += 1
+            if not self.hedge_retry:
+                return None, False
+        # hedged retry: re-resolve the endpoint first — the supervisor
+        # may have respawned the worker since the failed attempt
+        if self.endpoints_fn is not None:
+            eps = self.endpoints_fn()
+            ep = eps[shard] if shard < len(eps) else None
+            if ep is None:
+                return None, False     # shard is known-down: don't knock
+            if isinstance(client, SocketShardClient) \
+                    and ep != client.socket_path:
+                client.socket_path = ep
+            client.reset()
+        with self._lock:
+            self._tel["retries"] += 1
+            self._tel["shard_attempts"] += 1
+        try:
+            out = client.search(query, k, corpus=corpus,
+                                deadline_s=self.shard_deadline_s)
+            with self._lock:
+                self._tel["retry_successes"] += 1
+            return out, True
+        except ShardUnavailableError:
+            with self._lock:
+                self._tel["shard_failures"] += 1
+            return None, True
+
+    # -- public API ----------------------------------------------------------
+    def search(self, query: np.ndarray, k: int, *,
+               corpus: str = "default") -> RouterResult:
+        """Scatter `query` to every shard, gather within the per-shard
+        deadline, merge.  Raises DegradedServiceError below quorum."""
+        t0 = time.perf_counter()
+        with self._lock:
+            self._tel["queries"] += 1
+        futs = [self._pool.submit(self._ask, s, query, k, corpus)
+                for s in range(len(self.clients))]
+        parts_ids: List[np.ndarray] = []
+        parts_dists: List[np.ndarray] = []
+        failed: List[int] = []
+        retried: List[int] = []
+        for s, f in enumerate(futs):
+            out, did_retry = f.result()   # _ask never raises; bounded by
+            if did_retry:                 # 2x shard deadline + connect
+                retried.append(s)
+            if out is None:
+                failed.append(s)
+            else:
+                parts_ids.append(out[0])
+                parts_dists.append(out[1])
+        answered = len(self.clients) - len(failed)
+        if answered < self.min_shards:
+            with self._lock:
+                self._tel["rejected"] += 1
+            raise DegradedServiceError(answered, len(self.clients),
+                                       self.min_shards)
+        ids, dists = merge_topk(parts_ids, parts_dists, k)
+        partial = bool(failed)
+        with self._lock:
+            self._tel["partial" if partial else "full"] += 1
+        return RouterResult(ids=ids, dists=dists, partial=partial,
+                            shards_answered=answered,
+                            shards_failed=len(failed),
+                            failed_shards=failed, retried_shards=retried,
+                            latency_s=time.perf_counter() - t0)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(self._tel)
+
+    def close(self):
+        self._pool.shutdown(wait=False)
+        for c in self.clients:
+            c.close()

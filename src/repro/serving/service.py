@@ -31,7 +31,8 @@ import numpy as np
 from repro.serving.engine import Request, make_host_search_fn
 from repro.serving.pool import CorpusUnhealthyError, WarmIndexPool
 
-__all__ = ["BackpressureError", "CorpusUnhealthyError", "RetrievalService"]
+__all__ = ["BackpressureError", "CorpusUnhealthyError",
+           "ServiceClosedError", "RetrievalService"]
 
 
 class BackpressureError(RuntimeError):
@@ -44,6 +45,15 @@ class BackpressureError(RuntimeError):
         self.corpus = corpus
         self.depth = depth
         self.limit = limit
+
+
+class ServiceClosedError(RuntimeError):
+    """The service is shutting down: raised by `submit` once `close()`
+    (or `stop()`) has begun, and set on requests still queued when the
+    drain deadline passes.  A RuntimeError subclass so callers that
+    guarded the old untyped `RuntimeError("service stopped")` keep
+    working; cluster workers map it to a clean per-request error frame
+    instead of a dropped connection."""
 
 
 _LATENCY_WINDOW = 4096       # percentile window per corpus (bounded memory)
@@ -102,6 +112,7 @@ class RetrievalService:
         self._rr_next = 0
         self._tel: Dict[str, _CorpusTelemetry] = {}
         self._stop = False
+        self._closing = False    # close() begun: reject new, drain queued
         self._t0 = time.perf_counter()
         self._workers = [
             threading.Thread(target=self._worker, name=f"retrieval-w{i}",
@@ -133,8 +144,8 @@ class RetrievalService:
         if deadline_s is not None:
             r.deadline = r.t_submit + float(deadline_s)
         with self._cond:
-            if self._stop:
-                raise RuntimeError("service stopped")
+            if self._stop or self._closing:
+                raise ServiceClosedError("service stopped")
             q = self._queues.get(corpus)
             if q is None:
                 q = self._queues[corpus] = deque()
@@ -248,6 +259,7 @@ class RetrievalService:
     def _serve(self, corpus: str, batch: List[Request]):
         err: Optional[Exception] = None
         ids = None
+        dists = None
         load_s = 0.0
         try:
             # inside the try: a malformed query (ragged dims) must fail the
@@ -255,12 +267,23 @@ class RetrievalService:
             queries = np.stack([r.query for r in batch])
             k = max(r.k for r in batch)
             with self.pool.lease(corpus) as (idx, load_s):
-                ids = self._search_fn(idx, queries, k)
+                out = self._search_fn(idx, queries, k)
+            # a search_fn may return (ids, dists) — cluster shard workers
+            # do, because the scatter-gather merge needs exact scores
+            if isinstance(out, tuple):
+                ids, dists = out
+                dists = np.asarray(dists)
+            else:
+                ids = out
             ids = np.asarray(ids)        # malformed returns fail the batch
             if ids.ndim != 2 or ids.shape[0] != len(batch):
                 raise ValueError(
                     f"search_fn returned shape {ids.shape}, expected "
                     f"({len(batch)}, k)")
+            if dists is not None and dists.shape != ids.shape:
+                raise ValueError(
+                    f"search_fn dists shape {dists.shape} != ids shape "
+                    f"{ids.shape}")
         except Exception as e:           # noqa: BLE001 — fail the batch,
             err = e                      # never kill the worker thread
         # feed the pool's circuit breaker: OSError covers raw I/O errors,
@@ -286,6 +309,8 @@ class RetrievalService:
                     tel.errors += 1
                 else:
                     r.result = ids[i, :r.k]
+                    if dists is not None:
+                        r.dists = dists[i, :r.k]
                     tel.completed += 1
                     tel.latencies.append(r.latency_s)
                 tel.last_done = now
@@ -322,7 +347,7 @@ class RetrievalService:
             ) if any(t.latencies for t in self._tel.values()) else \
                 np.zeros(0)
             total_done = sum(t.completed for t in self._tel.values())
-            return dict(
+            out = dict(
                 corpora=corpora,
                 total_completed=total_done,
                 total_rejected=sum(t.rejected for t in self._tel.values()),
@@ -333,19 +358,45 @@ class RetrievalService:
                 uptime_s=time.perf_counter() - self._t0,
                 **({"p50_ms": float(np.percentile(all_lat, 50) * 1e3),
                     "p99_ms": float(np.percentile(all_lat, 99) * 1e3)}
-                   if all_lat.size else {}),
-                pool=self.pool.stats())
+                   if all_lat.size else {}))
+        # pool snapshot taken OUTSIDE the service lock: the pool does its
+        # own single-pass consistent capture under its own lock, and the
+        # service never holds both locks at once (no ordering to get
+        # wrong against serve-path pool calls)
+        out["pool"] = self.pool.stats()
+        return out
 
     # -- lifecycle -----------------------------------------------------------
+    def close(self, drain_s: float = 5.0, timeout: float = 5.0):
+        """Graceful shutdown: stop admitting new requests (submits raise
+        `ServiceClosedError` immediately), let the workers DRAIN what is
+        already queued for up to `drain_s`, then fail whatever remains
+        with the same typed error and join the workers.  This is what a
+        cluster worker runs on SIGTERM — in-flight callers get answers
+        or a typed rejection, never an abandoned request."""
+        with self._cond:
+            if self._stop:
+                return
+            self._closing = True
+            self._cond.notify_all()
+        deadline = time.perf_counter() + max(0.0, drain_s)
+        while time.perf_counter() < deadline:
+            with self._cond:
+                if not any(self._queues.values()) and not self._busy:
+                    break
+            time.sleep(0.005)
+        self.stop(timeout)
+
     def stop(self, timeout: float = 5.0):
         with self._cond:
             self._stop = True
+            self._closing = True
             # fail whatever is still queued — nobody will serve it
             leftovers = [r for q in self._queues.values() for r in q]
             for q in self._queues.values():
                 q.clear()
             self._cond.notify_all()
-        err = RuntimeError("service stopped")
+        err = ServiceClosedError("service stopped")
         for r in leftovers:
             r.error = err
             r.event.set()

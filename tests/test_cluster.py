@@ -1,0 +1,366 @@
+"""Multi-process serving tier: wire protocol, shard math, supervisor,
+and the scatter-gather router's degradation contract."""
+import os
+import signal
+import socket
+import struct
+import subprocess
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import shard_math as SM
+from repro.core.faults import FlakySocket, ProcessKiller, SocketFaultPlan
+from repro.serving import protocol as proto
+from repro.serving.router import (DegradedServiceError, LocalShardClient,
+                                  ShardRouter, ShardUnavailableError,
+                                  SocketShardClient)
+
+# ---------------------------------------------------------------------------
+# wire protocol
+# ---------------------------------------------------------------------------
+
+
+def test_frame_roundtrip():
+    a, b = socket.socketpair()
+    try:
+        proto.send_frame(a, proto.T_SEARCH, {"k": 5, "corpus": "x"},
+                         b"\x00\x01\xfe payload")
+        rtype, header, blob = proto.recv_frame(b)
+        assert rtype == proto.T_SEARCH
+        assert header == {"k": 5, "corpus": "x"}
+        assert blob == b"\x00\x01\xfe payload"
+    finally:
+        a.close(), b.close()
+
+
+def test_query_and_result_roundtrip():
+    q = np.random.default_rng(0).standard_normal(48).astype(np.float32)
+    h, blob = proto.encode_query(q, corpus="c", k=7, req_id=3,
+                                 deadline_s=1.5)
+    q2 = proto.decode_query(h, blob)
+    np.testing.assert_array_equal(q, q2)
+    assert (h["corpus"], h["k"], h["req_id"]) == ("c", 7, 3)
+    ids = np.array([5, -1, 9], np.int64)
+    dists = np.array([0.25, np.inf, 1.5], np.float32)
+    h2, b2 = proto.encode_result(ids, dists, req_id=3)
+    ids2, dists2 = proto.decode_result(h2, b2)
+    np.testing.assert_array_equal(ids, ids2)
+    np.testing.assert_array_equal(dists, dists2)
+    assert ids2.dtype == np.int64 and dists2.dtype == np.float32
+
+
+def test_corrupt_byte_poisons_frame():
+    raw = bytearray(proto.pack_frame(proto.T_RESULT, {"req_id": 1},
+                                     b"x" * 64))
+    raw[len(raw) // 2] ^= 0x40          # one flipped bit mid-frame
+    a, b = socket.socketpair()
+    try:
+        a.sendall(bytes(raw))
+        with pytest.raises(proto.ProtocolError):
+            proto.recv_frame(b)
+    finally:
+        a.close(), b.close()
+
+
+def test_closed_peer_raises_connection_closed():
+    a, b = socket.socketpair()
+    a.close()
+    try:
+        with pytest.raises(proto.ConnectionClosed):
+            proto.recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_oversized_length_field_rejected_before_allocation():
+    a, b = socket.socketpair()
+    try:
+        # a header CLAIMING a 1 GB payload must be rejected from the
+        # length field alone — never trusted into an allocation
+        a.sendall(struct.pack("<IBII", 0x31515341, proto.T_SEARCH,
+                              0, 1 << 30))
+        with pytest.raises(proto.ProtocolError, match="corrupt length"):
+            proto.recv_frame(b)
+    finally:
+        a.close(), b.close()
+
+
+def test_flaky_socket_corruption_caught_by_crc():
+    """Every bit flip the wire shim injects must surface as a typed
+    ProtocolError — never as silently wrong data."""
+    a, b = socket.socketpair()
+    flaky = FlakySocket(a, SocketFaultPlan(seed=3, corrupt_rate=1.0,
+                                           max_faults=1))
+    try:
+        proto.send_frame(flaky, proto.T_SEARCH, {"k": 1}, b"z" * 256)
+        with pytest.raises(proto.ProtocolError):
+            proto.recv_frame(b)
+        assert flaky.injected_corrupt == 1
+    finally:
+        a.close(), b.close()
+
+
+# ---------------------------------------------------------------------------
+# shard math (host twin of the device all-gather merge)
+# ---------------------------------------------------------------------------
+
+
+def test_contiguous_shards_matches_array_split():
+    for n, s in ((10, 3), (7, 7), (20000, 4), (5, 1)):
+        asn = SM.contiguous_shards(n, s)
+        sizes = [len(part) for part in np.array_split(np.arange(n), s)]
+        assert list(asn.counts) == sizes
+        assert asn.n == n and asn.n_shards == s
+        lo = 0
+        for sh in range(s):
+            b = asn.bounds(sh)
+            assert b == (lo, lo + sizes[sh])
+            lo += sizes[sh]
+        for sh in range(s):
+            blo, bhi = asn.bounds(sh)
+            assert asn.shard_of(blo) == sh
+            assert asn.shard_of(bhi - 1) == sh
+
+
+def test_merge_topk_matches_global_sort():
+    rng = np.random.default_rng(1)
+    parts_ids = [rng.permutation(100)[:8] + 100 * s for s in range(3)]
+    parts_dists = [rng.standard_normal(8).astype(np.float32)
+                   for _ in range(3)]
+    ids, dists = SM.merge_topk(parts_ids, parts_dists, 10)
+    all_ids = np.concatenate(parts_ids)
+    all_d = np.concatenate(parts_dists)
+    order = np.lexsort((all_ids, all_d))[:10]
+    np.testing.assert_array_equal(ids, all_ids[order])
+    np.testing.assert_array_equal(dists, all_d[order])
+
+
+def test_merge_topk_pads_and_drops_invalid():
+    ids, dists = SM.merge_topk([np.array([3, -1])],
+                               [np.array([0.5, 0.1], np.float32)], 4)
+    np.testing.assert_array_equal(ids, [3, -1, -1, -1])
+    assert dists[0] == np.float32(0.5) and np.isinf(dists[1:]).all()
+
+
+# ---------------------------------------------------------------------------
+# router degradation over in-process shards
+# ---------------------------------------------------------------------------
+
+
+def _const_client(ids, dists, name="c"):
+    return LocalShardClient(
+        lambda q, k, i=np.asarray(ids), d=np.asarray(dists): (i, d), name)
+
+
+def _failing_client(name="dead"):
+    def fn(q, k):
+        raise OSError("shard is on fire")
+    return LocalShardClient(fn, name)
+
+
+def test_router_full_coverage_merges_exactly():
+    c0 = _const_client([1, 3], [0.1, 0.3])
+    c1 = _const_client([2, 4], [0.2, 0.4])
+    r = ShardRouter([c0, c1], min_shards=1)
+    out = r.search(np.zeros(4, np.float32), 3)
+    assert not out.partial and out.shards_answered == 2
+    np.testing.assert_array_equal(out.ids, [1, 2, 3])
+    st = r.stats()
+    assert st["queries"] == 1 and st["full"] == 1 and st["partial"] == 0
+    r.close()
+
+
+def test_router_partial_on_one_dead_shard():
+    c0 = _const_client([1, 3], [0.1, 0.3])
+    r = ShardRouter([c0, _failing_client()], min_shards=1,
+                    hedge_retry=False)
+    out = r.search(np.zeros(4, np.float32), 3)
+    assert out.partial and out.failed_shards == [1]
+    np.testing.assert_array_equal(out.ids, [1, 3, -1])
+    assert r.stats()["shard_failures"] == 1
+    r.close()
+
+
+def test_router_quorum_rejects_cleanly():
+    r = ShardRouter([_failing_client("a"), _failing_client("b")],
+                    min_shards=1, hedge_retry=False)
+    with pytest.raises(DegradedServiceError) as ei:
+        r.search(np.zeros(4, np.float32), 3)
+    assert ei.value.answered == 0 and ei.value.min_shards == 1
+    assert r.stats()["rejected"] == 1
+    r.close()
+
+    r2 = ShardRouter([_const_client([1], [0.1]), _failing_client()],
+                     min_shards=2, hedge_retry=False)
+    with pytest.raises(DegradedServiceError):
+        r2.search(np.zeros(4, np.float32), 3)
+    r2.close()
+
+
+def test_router_hedged_retry_skips_shards_reported_down():
+    calls = []
+
+    def fn(q, k):
+        calls.append(1)
+        raise OSError("nope")
+
+    r = ShardRouter([_const_client([1], [0.1]),
+                     LocalShardClient(fn, "down")],
+                    min_shards=1, hedge_retry=True,
+                    endpoints_fn=lambda: ["/ok", None])
+    out = r.search(np.zeros(4, np.float32), 2)
+    assert out.partial and len(calls) == 1      # no knock on a known corpse
+    assert r.stats()["retries"] == 0
+    r.close()
+
+
+def test_local_client_wraps_errors_as_unavailable():
+    with pytest.raises(ShardUnavailableError, match="on fire"):
+        _failing_client().search(np.zeros(2, np.float32), 1)
+
+
+# ---------------------------------------------------------------------------
+# ProcessKiller drill primitive
+# ---------------------------------------------------------------------------
+
+
+def test_process_killer_fires_exactly_once_at_tick():
+    p = subprocess.Popen(["sleep", "60"])
+    try:
+        k = ProcessKiller(at=3).arm(p.pid)
+        assert not k.tick() and not k.tick()
+        assert p.poll() is None
+        assert k.tick()                 # third tick fires
+        assert k.killed_pid == p.pid
+        assert not k.tick()             # never fires twice
+        assert p.wait(5.0) == -signal.SIGKILL
+    finally:
+        if p.poll() is None:
+            p.kill()
+            p.wait()
+
+
+# ---------------------------------------------------------------------------
+# cluster end-to-end: spawn, serve, kill, respawn
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def shard_dirs(tmp_path_factory, small_corpus, pq_artifacts):
+    """Two global-label shards over the shared test corpus's prefix —
+    the cluster twin of the pool fixture's sub-corpora."""
+    from repro.core.index_io import write_index
+    from repro.core.vamana import build_vamana
+    base, _, _ = small_corpus
+    cents, codes = pq_artifacts
+    asn = SM.contiguous_shards(1000, 2)
+    root = tmp_path_factory.mktemp("cluster_shards")
+    shards = []
+    for s in range(2):
+        lo, hi = asn.bounds(s)
+        g = build_vamana(base[lo:hi], R=12, L=24, seed=s)
+        p = str(root / f"shard{s}")
+        write_index(p, vectors=base[lo:hi], graph=g, centroids=cents,
+                    codes=codes[lo:hi], metric="l2", mode="aisaq",
+                    labels=np.arange(lo, hi, dtype=np.int64))
+        shards.append({"default": p})
+    return shards
+
+
+def _refs(shards, queries, k):
+    from repro.core.index_io import HostIndex
+    from repro.serving.engine import make_host_search_dist_fn
+    ids, dists = [], []
+    for corpora in shards:
+        idx = HostIndex.load(corpora["default"], cache_bytes=1 << 20)
+        i, d = make_host_search_dist_fn(idx, L=24, w=4)(queries, k)
+        ids.append(i), dists.append(d)
+        idx.close()
+    return ids, dists
+
+
+def test_cluster_kill_respawn_end_to_end(shard_dirs, small_corpus):
+    """The kill-a-worker drill in miniature: full-coverage answers are
+    bit-identical to single-process references, a SIGKILLed worker
+    degrades the router to clean partials over the survivor, and the
+    supervisor's respawn restores bit-identical full coverage."""
+    from repro.serving.cluster import ShardCluster
+    _, q, _ = small_corpus
+    q, k = q[:6], 5
+    ref_ids, ref_dists = _refs(shard_dirs, q, k)
+    sd = tempfile.mkdtemp(prefix="clus-test")
+    cluster = ShardCluster(shard_dirs, socket_dir=sd, L=24, w=4,
+                           cache_bytes=1 << 20, heartbeat_s=0.1,
+                           backoff_s=0.2, stable_s=1.0)
+    cluster.start()
+    router = ShardRouter([SocketShardClient(p)
+                          for p in cluster.endpoints()],
+                         min_shards=1, shard_deadline_s=3.0,
+                         endpoints_fn=cluster.endpoints)
+    try:
+        # full coverage: bit-identical to the merged references
+        for qi in range(len(q)):
+            out = router.search(q[qi], k)
+            assert not out.partial
+            eids, edists = SM.merge_topk(
+                [ref_ids[s][qi] for s in (0, 1)],
+                [ref_dists[s][qi] for s in (0, 1)], k)
+            np.testing.assert_array_equal(out.ids, eids)
+            np.testing.assert_array_equal(out.dists, edists)
+
+        # SIGKILL shard 1 mid-service: requests must RESOLVE — full
+        # (hedge won the race with the respawn) or clean partial —
+        # and a partial must appear before recovery completes
+        os.kill(cluster.pid(1), signal.SIGKILL)
+        saw_partial, deadline = None, time.monotonic() + 10.0
+        while saw_partial is None and time.monotonic() < deadline:
+            out = router.search(q[0], k)
+            if out.partial:
+                saw_partial = out
+        assert saw_partial is not None, "kill never degraded coverage"
+        assert saw_partial.failed_shards == [1]
+        eids, edists = SM.merge_topk([ref_ids[0][0]], [ref_dists[0][0]],
+                                     k)
+        np.testing.assert_array_equal(saw_partial.ids, eids)
+        np.testing.assert_array_equal(saw_partial.dists, edists)
+
+        # respawn restores bit-identical full coverage
+        assert cluster.wait_healthy(20.0)
+        deadline = time.monotonic() + 10.0
+        out = router.search(q[1], k)
+        while out.partial and time.monotonic() < deadline:
+            out = router.search(q[1], k)
+        assert not out.partial
+        eids, edists = SM.merge_topk(
+            [ref_ids[s][1] for s in (0, 1)],
+            [ref_dists[s][1] for s in (0, 1)], k)
+        np.testing.assert_array_equal(out.ids, eids)
+        np.testing.assert_array_equal(out.dists, edists)
+        assert cluster.stats()["shards"][1]["restarts"] >= 1
+    finally:
+        router.close()
+        cluster.stop()
+
+
+def test_cluster_worker_stats_over_the_wire(shard_dirs, small_corpus):
+    from repro.serving.cluster import ShardCluster
+    _, q, _ = small_corpus
+    sd = tempfile.mkdtemp(prefix="clus-stats")
+    cluster = ShardCluster(shard_dirs[:1], socket_dir=sd, L=24, w=4,
+                           cache_bytes=1 << 20)
+    cluster.start()
+    try:
+        router = ShardRouter([SocketShardClient(cluster.endpoints()[0])],
+                             endpoints_fn=cluster.endpoints)
+        router.search(q[0], 5)
+        st = cluster.worker_stats(0)
+        assert st is not None and st["total_completed"] >= 1
+        assert "pool" in st and "recoveries" in st["pool"]
+        router.close()
+        top = cluster.stats()
+        assert top["serving"] == 1 and top["quarantined"] == 0
+    finally:
+        cluster.stop()

@@ -308,3 +308,57 @@ def test_swap_zero_dropped_requests(corpora_dirs):
     assert s["swaps"] == 6
     pool.close()
     assert pool.stats()["retired"] == 0      # every reader drained
+
+
+# ---------------------------------------------------------------------------
+# journal-recovery surfacing + snapshot consistency
+# ---------------------------------------------------------------------------
+
+
+def test_pool_surfaces_journal_recovery_in_stats(corpora_dirs, tmp_path):
+    """A corpus directory left with a non-empty WAL (previous writer
+    crashed) must be routed through journal recovery at pool-load time,
+    and the outcome — including how many torn-tail bytes were truncated
+    — must appear in stats()["recoveries"] for serving telemetry."""
+    import os
+    import shutil
+
+    from repro.core.wal import WAL_NAME
+    crashed = str(tmp_path / "crashed")
+    shutil.copytree(corpora_dirs["c0"], crashed)
+    garbage = b"\xde\xad\xbe\xef" + b"\x00" * 33   # half a torn frame
+    with open(os.path.join(crashed, WAL_NAME), "wb") as f:
+        f.write(garbage)
+    pool = WarmIndexPool({"crashed": crashed, "clean": corpora_dirs["c1"]},
+                         cache_bytes=CACHE)
+    pool.ensure("crashed")
+    pool.ensure("clean")
+    rec = pool.stats()["recoveries"]
+    assert set(rec) == {"crashed"}          # clean corpora don't report
+    assert rec["crashed"]["truncated_bytes"] == len(garbage)
+    assert rec["crashed"]["rolled_back"] == 0
+    assert rec["crashed"]["rolled_forward"] == 0
+    # recovery truncated the journal on disk: the NEXT open is clean
+    assert os.path.getsize(os.path.join(crashed, WAL_NAME)) == 0
+    pool.close()
+
+
+def test_pool_stats_is_one_consistent_snapshot(corpora_dirs):
+    """Counters for each open handle come from ONE atomic snapshot and
+    the aggregate rows are sums of exactly the per-corpus rows."""
+    pool = WarmIndexPool(corpora_dirs, cache_bytes=CACHE)
+    q = np.random.default_rng(0).standard_normal(48).astype(np.float32)
+    for name in corpora_dirs:
+        idx, _ = pool.pin(name)
+        idx.search_batch(q[None], 3, L=24)
+        pool.unpin(name, idx)
+    s = pool.stats()
+    assert set(s["caches"]) == set(corpora_dirs)
+    for row in s["caches"].values():
+        for key in ("read_retries", "crc_mismatches", "crc_rereads",
+                    "demand_syscalls", "hit_rate"):
+            assert key in row
+    assert s["open"] == len(corpora_dirs)
+    assert s["used_bytes"] > 0
+    assert "recoveries" in s
+    pool.close()

@@ -296,3 +296,71 @@ def test_service_submit_wait_timeout_raises(service_pool, small_corpus):
     with pytest.raises(TimeoutError):
         svc.submit_wait(q[0], corpus="t0", timeout=0.05)
     svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# graceful close: drain, then typed rejection
+# ---------------------------------------------------------------------------
+
+
+def test_service_close_drains_then_rejects_typed(service_pool,
+                                                 small_corpus):
+    from repro.serving.service import RetrievalService, ServiceClosedError
+    base, q, _ = small_corpus
+
+    def slowish(idx, queries, k):
+        time.sleep(0.05)
+        return np.tile(np.arange(k)[None], (queries.shape[0], 1))
+
+    svc = RetrievalService(service_pool, num_workers=1, max_batch=2,
+                           max_wait_ms=0.5, search_fn=slowish)
+    reqs = [svc.submit(q[0], corpus="t0", k=5) for _ in range(6)]
+    svc.close(drain_s=10.0)
+    # everything queued before close() COMPLETED (drained, not dropped)
+    for r in reqs:
+        assert r.event.is_set()
+        assert r.error is None and r.result is not None
+    # submits after close fail with the typed error, which subclasses
+    # RuntimeError so existing except-RuntimeError callers still catch it
+    with pytest.raises(ServiceClosedError):
+        svc.submit(q[0], corpus="t0", k=5)
+    assert issubclass(ServiceClosedError, RuntimeError)
+
+
+def test_service_stop_fails_queued_with_typed_error(service_pool,
+                                                    small_corpus):
+    from repro.serving.service import RetrievalService, ServiceClosedError
+    base, q, _ = small_corpus
+
+    def stall(idx, queries, k):
+        time.sleep(0.3)
+        return np.zeros((queries.shape[0], k), np.int64)
+
+    svc = RetrievalService(service_pool, num_workers=1, max_batch=1,
+                           max_wait_ms=0.5, search_fn=stall)
+    reqs = [svc.submit(q[0], corpus="t0", k=5) for _ in range(4)]
+    svc.stop(timeout=1.0)
+    failed = [r for r in reqs if r.error is not None]
+    assert failed, "stop() left queued requests silently unresolved"
+    for r in failed:
+        assert isinstance(r.error, ServiceClosedError)
+
+
+def test_service_stats_one_snapshot_with_pool(service_pool, small_corpus):
+    """stats() returns ONE consistent snapshot: totals equal the sum of
+    the per-corpus rows taken under the same lock hold, and the pool
+    section (taken outside the service lock — the service never holds
+    both) carries the journal-recovery map."""
+    from repro.serving.service import RetrievalService
+    base, q, _ = small_corpus
+    svc = RetrievalService(service_pool, num_workers=2, max_wait_ms=0.5,
+                           L=24)
+    for i in range(8):
+        svc.submit_wait(q[i % len(q)], corpus=f"t{i % 2}", k=5,
+                        timeout=10.0)
+    st = svc.stats()
+    assert st["total_completed"] == sum(
+        c["completed"] for c in st["corpora"].values()) == 8
+    assert "recoveries" in st["pool"]       # clean boot: empty map
+    assert st["pool"]["recoveries"] == {}
+    svc.stop()
