@@ -365,6 +365,7 @@ def all_benchmarks():
         restarts=d["restarts"],
         scaling_gate=sc["gate"],
         qps={str(n): r["qps"] for n, r in sc["rows"].items()})
+    report["provenance"] = C.provenance("cluster")
     dest = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_cluster.json")
     with open(os.path.abspath(dest), "w") as f:

@@ -293,6 +293,7 @@ def all_benchmarks():
         bit_identical_to_fault_free=d["bit_identical_to_fault_free"],
         crc_warm_overhead_pct=ov["warm_overhead_pct"],
         crc_warm_under_5pct=ov["warm_under_5pct"])
+    report["provenance"] = C.provenance("faults")
     dest = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
     with open(os.path.abspath(dest), "w") as f:
         json.dump(report, f, indent=1)

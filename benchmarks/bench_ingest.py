@@ -380,9 +380,11 @@ def drill_failures(rep: dict) -> list:
 
 
 def run_all(p: dict, tag: str) -> dict:
+    from benchmarks import common as C
     base = make_clustered(p["n0"] + p["n_insert"] + 64, p["dim"], seed=2)
     rep = {"schema_version": SCHEMA_VERSION, "mode": tag,
-           "workload": dict(p, k=K, L=L, w=W)}
+           "workload": dict(p, k=K, L=L, w=W),
+           "provenance": C.provenance("ingest")}
     with tempfile.TemporaryDirectory() as td:
         rep["concurrent_ingest"] = bench_concurrent_ingest(td, base, p)
         rep["compaction_swap"] = bench_compaction_swap(td, base, p)

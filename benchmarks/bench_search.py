@@ -329,6 +329,7 @@ def all_benchmarks():
         ["blocked_wait_reduction_x"],
         pipeline_io_overhead_x=po["headline"]["io_overhead_x"],
         host_int8_recall_gap=h8["recall_gap"])
+    report["provenance"] = C.provenance("search")
     dest = os.path.join(os.path.dirname(__file__), "..", "BENCH_search.json")
     with open(os.path.abspath(dest), "w") as f:
         json.dump(report, f, indent=1)
@@ -424,6 +425,41 @@ def quick_smoke() -> int:
             failures.append(
                 f"pipelined blocked wait regressed: {blk_p*1e3:.2f}ms "
                 f"vs serial {blk_s*1e3:.2f}ms")
+        # -- tracing disabled-overhead gate (ISSUE 9 acceptance): with no
+        # span active, instrumentation costs one thread-local read + one
+        # branch per hop; the warm hot path with tracing at its DEFAULT
+        # (enabled globally, nothing sampled) must stay within 2% of the
+        # set_enabled(False) kill switch.  Median over alternating
+        # repeats + an absolute epsilon absorb shared-runner noise on a
+        # sub-ms per-query path.
+        from repro.obs import trace as obs_trace
+        idx = HostIndex.load(p)
+        idx.search_batch(q, K, L=L, w=W)          # warm the cache
+        reps, t_def, t_off = 9, [], []
+        try:
+            for _ in range(reps):
+                for flag, acc in ((True, t_def), (False, t_off)):
+                    obs_trace.set_enabled(flag)
+                    t1 = time.perf_counter()
+                    idx.search_batch(q, K, L=L, w=W)
+                    acc.append((time.perf_counter() - t1) / len(q))
+        finally:
+            obs_trace.set_enabled(True)
+        idx.close()
+        # min-of-reps: scheduler noise only ever ADDS latency, so the
+        # minimum is the cleanest view of a few-branches-per-hop cost
+        td_def = float(np.min(t_def))
+        td_off = float(np.min(t_off))
+        overhead = (td_def - td_off) / td_off if td_off else 0.0
+        if td_def > td_off * 1.02 + 50e-6:
+            failures.append(
+                f"tracing-disabled hot-path overhead {overhead*100:.2f}% "
+                f"exceeds 2% ({td_def*1e6:.0f}us vs {td_off*1e6:.0f}us "
+                "per query)")
+        else:
+            print(f"[bench_search --quick] tracing-disabled overhead "
+                  f"{overhead*100:+.2f}% "
+                  f"({td_def*1e6:.0f}us vs {td_off*1e6:.0f}us/query)")
     wall = time.perf_counter() - t0
     if failures:
         for msg in failures:

@@ -212,6 +212,7 @@ def all_benchmarks():
         rerank_recall10=rr["tiers"]["rerank"]["recall10"],
         pq_only_recall10=rr["tiers"]["pq_only"]["recall10"],
         rerank_identical_to_oracle=rr["identical_to_oracle"])
+    report["provenance"] = C.provenance("serving")
     dest = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_serving.json")
     with open(os.path.abspath(dest), "w") as f:

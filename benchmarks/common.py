@@ -243,3 +243,36 @@ def ensure_shard_indices(n_shards: int, m: int = DEFAULT_M,
 def rss_mb() -> float:
     import psutil
     return psutil.Process().memory_info().rss / 1e6
+
+
+# -- report provenance -------------------------------------------------------
+
+
+def provenance(schema: str) -> dict:
+    """Uniform provenance header for every BENCH_*.json artifact.
+
+    Regression tooling (`benchmarks/report.py`) and humans reading CI
+    artifacts both need to know WHICH code on WHICH box produced a
+    number before trusting a delta.  Never raises — a benchmark must
+    not fail because git metadata is unavailable (e.g. a bare export).
+    """
+    import platform
+    import subprocess
+    from datetime import datetime, timezone
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=5,
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        commit = None
+    return dict(
+        schema=schema,
+        git_commit=commit,
+        host=dict(hostname=platform.node(),
+                  machine=platform.machine(),
+                  system=platform.system(),
+                  python=platform.python_version(),
+                  cpus=os.cpu_count()),
+        timestamp=datetime.now(timezone.utc).isoformat(),
+    )

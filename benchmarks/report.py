@@ -1,0 +1,139 @@
+"""Regression summary over the benchmark report artifacts.
+
+Reads every ``BENCH_*.json`` at the repo root, pulls each report's
+``headline`` dict, and diffs its numeric entries against the previous
+committed artifact (``git show HEAD:BENCH_x.json``) so a CI run shows
+at a glance which key metrics moved and by how much.
+
+Informational by design: exits 0 regardless of deltas (benchmarks on
+shared CI boxes are too noisy to gate on), missing baselines are shown
+as NEW, and unreadable files are reported rather than fatal.  The
+``provenance`` header stamped by ``benchmarks/common.provenance`` tells
+the reader which commit/host produced each side of the diff.
+
+Usage: ``python benchmarks/report.py [--root DIR] [--ref GITREF]``
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+__all__ = ["collect", "diff_headlines", "render"]
+
+
+def _load(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        return {"_error": f"{type(e).__name__}: {e}"}
+
+
+def _load_ref(root: str, name: str, ref: str):
+    """The previously committed artifact, or None when it has none."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:{name}"], capture_output=True,
+            text=True, cwd=root, timeout=10)
+        if out.returncode != 0:
+            return None
+        return json.loads(out.stdout)
+    except (OSError, ValueError, subprocess.SubprocessError):
+        return None
+
+
+def diff_headlines(cur: dict, prev) -> list:
+    """Rows of (metric, current, previous, pct_delta | None).
+
+    Non-numeric headline entries (bools count as numeric-ish but are
+    compared for equality) diff as changed/unchanged; missing previous
+    values show as NEW.
+    """
+    rows = []
+    head = cur.get("headline") if isinstance(cur, dict) else None
+    if not isinstance(head, dict):
+        return rows
+    phead = prev.get("headline", {}) if isinstance(prev, dict) else {}
+    if not isinstance(phead, dict):
+        phead = {}
+    for key in sorted(head):
+        val = head[key]
+        old = phead.get(key)
+        if isinstance(val, bool) or not isinstance(val, (int, float)):
+            rows.append((key, val, old, None))
+            continue
+        if isinstance(old, bool) or not isinstance(old, (int, float)):
+            rows.append((key, val, None, None))
+            continue
+        pct = ((val - old) / abs(old) * 100.0) if old else None
+        rows.append((key, val, old, pct))
+    return rows
+
+
+def collect(root: str, ref: str = "HEAD") -> list:
+    """(name, current_report, previous_report | None) per artifact."""
+    out = []
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        name = os.path.basename(path)
+        out.append((name, _load(path), _load_ref(root, name, ref)))
+    return out
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def render(reports: list, ref: str) -> str:
+    lines = []
+    for name, cur, prev in reports:
+        if "_error" in cur:
+            lines.append(f"{name}: UNREADABLE ({cur['_error']})")
+            continue
+        prov = cur.get("provenance") or {}
+        commit = (prov.get("git_commit") or "?")[:12]
+        stamp = prov.get("timestamp", "?")
+        lines.append(f"{name}  (commit {commit}, {stamp})")
+        if prev is None:
+            lines.append(f"  no {ref} baseline — all metrics NEW")
+        rows = diff_headlines(cur, prev)
+        if not rows:
+            lines.append("  no headline dict")
+            continue
+        for key, val, old, pct in rows:
+            if pct is not None:
+                arrow = "+" if pct >= 0 else ""
+                lines.append(f"  {key:<44} {_fmt(val):>12}  "
+                             f"(prev {_fmt(old)}, {arrow}{pct:.1f}%)")
+            elif old is None:
+                lines.append(f"  {key:<44} {_fmt(val):>12}  (NEW)")
+            elif val == old:
+                lines.append(f"  {key:<44} {_fmt(val):>12}  (unchanged)")
+            else:
+                lines.append(f"  {key:<44} {_fmt(val):>12}  "
+                             f"(prev {_fmt(old)}, CHANGED)")
+    if not reports:
+        lines.append("no BENCH_*.json artifacts found")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."))
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the baseline artifacts")
+    args = ap.parse_args(argv)
+    root = os.path.abspath(args.root)
+    print(f"[report] benchmark regression summary vs {args.ref}")
+    print(render(collect(root, args.ref), args.ref))
+    return 0               # informational: never fails the build
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,181 @@
+"""CI smoke for cross-process query tracing.
+
+Builds two tiny global-label shard indices in a tempdir, serves them
+through a real `ShardCluster` (spawned worker processes + Unix-socket
+protocol), routes traced queries through `ShardRouter`, and asserts the
+exported Chrome trace-event JSON holds ONE connected span chain:
+
+    router.search -> router.shard{N} -> worker.serve -> service.batch
+                  -> traversal.hop (>=1) -> cache.fetch (>=1)
+
+i.e. the trace context survived the frame header out, the worker's
+spans survived the result header back, and the hot path opened spans
+under the active batch span.  The exported file (``TRACE_query.json``
+at the repo root) is uploaded as a CI artifact so a failing run can be
+opened directly in Perfetto.
+
+Exit 0 on success, 1 with a reason on any broken link.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+K, L, W = 5, 24, 4
+N, DIM, NSHARDS = 1000, 48, 2
+
+
+def build_shards(root: str):
+    """Two tiny AiSAQ shards with global labels and one shared codebook
+    (the test-suite cluster fixture's shape, self-contained)."""
+    import jax
+
+    from repro.core import pq
+    from repro.core.index_io import write_index
+    from repro.core.shard_math import contiguous_shards
+    from repro.core.vamana import build_vamana
+    from repro.data.vectors import make_clustered, make_queries
+
+    base = make_clustered(N, DIM, seed=0)
+    queries = make_queries(8, base, seed=1)
+    cb = pq.train_codebooks(jax.random.PRNGKey(0), base, m=12, iters=4)
+    cents = np.asarray(cb.centroids)
+    codes = np.asarray(pq.encode(cb, base))
+    asn = contiguous_shards(N, NSHARDS)
+    shards = []
+    for s in range(NSHARDS):
+        lo, hi = asn.bounds(s)
+        g = build_vamana(base[lo:hi], R=12, L=24, seed=s)
+        p = os.path.join(root, f"shard{s}")
+        write_index(p, vectors=base[lo:hi], graph=g, centroids=cents,
+                    codes=codes[lo:hi], metric="l2", mode="aisaq",
+                    labels=np.arange(lo, hi, dtype=np.int64))
+        shards.append({"default": p})
+    return shards, queries
+
+
+def chain_failures(doc: dict) -> list:
+    """Validate the exported Chrome trace: every expected link present,
+    every span parented inside the same trace."""
+    fails = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["trace has no events"]
+    by_id = {}
+    for ev in events:
+        args = ev.get("args", {})
+        sid = args.get("span_id")
+        if ev.get("ph") != "X" or not sid:
+            fails.append(f"malformed event: {ev.get('name')}")
+            continue
+        by_id[sid] = ev
+
+    def named(prefix):
+        return [e for e in by_id.values()
+                if e["name"].startswith(prefix)]
+
+    def parent_of(ev):
+        return by_id.get(ev["args"].get("parent_id"))
+
+    roots = named("router.search")
+    if len(roots) != 1:
+        fails.append(f"expected exactly 1 router.search root, "
+                     f"got {len(roots)}")
+        return fails
+    root = roots[0]
+    tid = root["args"]["trace_id"]
+    for ev in by_id.values():
+        if ev["args"].get("trace_id") != tid:
+            fails.append(f"span {ev['name']} has foreign trace_id")
+
+    expect = [("router.shard", "router.search"),
+              ("worker.serve", "router.shard"),
+              ("service.batch", "worker.serve"),
+              ("traversal.hop", "service.batch"),
+              ("cache.fetch", "traversal.")]   # hop or rerank parent
+    for child_prefix, parent_prefix in expect:
+        children = named(child_prefix)
+        if not children:
+            fails.append(f"no {child_prefix}* span in trace")
+            continue
+        linked = [c for c in children
+                  if (parent_of(c) or {}).get("name", "")
+                  .startswith(parent_prefix)]
+        if not linked:
+            fails.append(f"no {child_prefix}* span parented under a "
+                         f"{parent_prefix}* span")
+    # both shards must appear in a full-coverage answer
+    shards_seen = {e["args"].get("shard") for e in named("worker.serve")}
+    if len(shards_seen) < NSHARDS:
+        fails.append(f"worker.serve spans cover shards {shards_seen}, "
+                     f"expected all {NSHARDS}")
+    return fails
+
+
+def main(argv=None) -> int:
+    # --quick is accepted for ci.sh uniformity; the smoke is already tiny
+    args = list(sys.argv[1:] if argv is None else argv)
+    if args and args not in (["--quick"],):
+        print(f"usage: trace_smoke.py [--quick] (got {args})",
+              file=sys.stderr)
+        return 2
+
+    from repro.obs.trace import Tracer
+    from repro.serving.cluster import ShardCluster
+    from repro.serving.router import ShardRouter, SocketShardClient
+
+    dest = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "TRACE_query.json"))
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory(prefix="trace-smoke") as td:
+        shards, queries = build_shards(td)
+        cluster = ShardCluster(shards, socket_dir=os.path.join(td, "sock"),
+                               L=L, w=W, cache_bytes=1 << 20)
+        cluster.start()
+        tracer = Tracer(sample=1.0)
+        router = ShardRouter([SocketShardClient(p)
+                              for p in cluster.endpoints()],
+                             min_shards=NSHARDS, shard_deadline_s=10.0,
+                             endpoints_fn=cluster.endpoints,
+                             tracer=tracer)
+        try:
+            out = router.search(queries[0], K)
+            assert not out.partial, "smoke query came back partial"
+            trace_id = tracer.finished()[-1]["trace_id"]
+            doc = tracer.export_chrome(dest, trace_id=trace_id)
+
+            # the merged cluster-wide registry must carry latency
+            # histograms with derived percentiles per corpus
+            reg = cluster.stats()["registry"]
+            lat = (reg or {}).get("service_latency_seconds", {})
+            series = lat.get("series", [])
+            pct_ok = any(s.get("count") and s.get("p50") is not None
+                         and s.get("p99") is not None for s in series)
+        finally:
+            router.close()
+            cluster.stop()
+
+    with open(dest) as f:
+        doc = json.load(f)             # must be valid JSON ON DISK
+    fails = chain_failures(doc)
+    if not pct_ok:
+        fails.append("cluster.stats()['registry'] lacks per-corpus "
+                     "latency percentiles")
+    wall = time.perf_counter() - t0
+    if fails:
+        for msg in fails:
+            print(f"[trace_smoke] FAIL: {msg}", file=sys.stderr)
+        return 1
+    print(f"[trace_smoke] ok ({wall:.1f}s): "
+          f"{len(doc['traceEvents'])} spans in one connected chain, "
+          f"wrote {dest}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,3 +49,16 @@ run_quick benchmarks/bench_ingest.py
 # bit-identical to single-process references over the answering shards,
 # and supervisor respawn restoring full coverage
 run_quick benchmarks/bench_cluster.py
+
+# tracing smoke: one traced query through router -> socket -> worker ->
+# traversal -> block cache must export a valid Chrome trace-event JSON
+# with the full connected span chain (TRACE_query.json, uploaded as a
+# workflow artifact), and the merged cluster registry must carry
+# per-corpus latency percentiles
+run_quick benchmarks/trace_smoke.py
+
+# benchmark regression summary vs the committed BENCH_*.json artifacts —
+# informational only (never fails the build), shows which headline
+# metrics moved and by how much
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/report.py || true

@@ -53,6 +53,8 @@ from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 from repro.core.integrity import CorruptBlockError, _crc32
 
 _PENDING_WAIT_S = 0.5       # bound on waiting for an in-flight prefetch
@@ -392,6 +394,26 @@ class BlockCache:
         offsets = np.asarray(offsets, dtype=np.int64)
         c = self.counters
         c.fetch_calls += 1
+        # read span: one per fetch when a query trace is active on this
+        # thread (untraced traffic pays one thread-local read)
+        _sp = obs_trace.begin("cache.fetch")
+        if _sp is not None:
+            try:
+                return self._fetch_traced(_sp, offsets, gap)
+            finally:
+                _sp.end()
+        return self._fetch_inner(offsets, gap)
+
+    def _fetch_traced(self, sp, offsets, gap):
+        out, hit_mask, n_sys = self._fetch_inner(offsets, gap)
+        sp.annotate(blocks=int(offsets.size),
+                    misses=int((~hit_mask).sum()), syscalls=int(n_sys),
+                    bytes=int(offsets.size) * self.io_bytes)
+        return out, hit_mask, n_sys
+
+    def _fetch_inner(self, offsets: np.ndarray, gap: Union[int, str]
+                     ) -> Tuple[np.ndarray, np.ndarray, int]:
+        c = self.counters
         uniq, first = np.unique(offsets, return_index=True)
         # first-appearance order (np.unique sorts; undo for caller attribution)
         order = np.argsort(first, kind="stable")

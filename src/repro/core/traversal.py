@@ -61,6 +61,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.core.adc import (np_adc, np_adc_int8, np_build_lut,
                             np_build_lut_batch, np_host_lut_int8)
 from repro.core.chunk_layout import B_NUM, parse_chunk
@@ -309,6 +310,9 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
     if cache is not None:
         c = cache.counters
         pf0 = (c.prefetch_issued, c.prefetch_hits, c.prefetch_wasted)
+    # tracing state resolved ONCE: the disabled hot path pays one
+    # thread-local read here and a single `is None` branch per hop
+    _tracing = obs_trace.current_span() is not None
     # graceful degradation state: consecutive hops whose background reads
     # failed (prefetch_errors delta observed at end of hop)
     pf_err_last = cache.counters.prefetch_errors if cache is not None else 0
@@ -387,13 +391,19 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
         # overlap this hop's ADC (the two-hop in-flight invariant).  The
         # exact catch-up issue at step 6 covers any mis-prediction.
         blk_off, inner = host._frontier_offsets(nf)
+        hop_sp = obs_trace.begin("traversal.hop", frontier=int(nf.size)) \
+            if _tracing else None
         if pipeline:
             _issue_prefetch(prefetch, exclude=blk_off)
         # 2. ONE batched fetch for every frontier chunk this hop; with
         # prefetch on, miss runs tolerate `gap`-block holes and read
         # them along (readahead into the cache)
         t_f = time.perf_counter()
-        blocks, hit_mask, n_sys = cache.fetch(blk_off, gap=gap_eff)
+        if hop_sp is None:
+            blocks, hit_mask, n_sys = cache.fetch(blk_off, gap=gap_eff)
+        else:
+            with obs_trace.activate(hop_sp):
+                blocks, hit_mask, n_sys = cache.fetch(blk_off, gap=gap_eff)
         blocked_s += time.perf_counter() - t_f
         # attribute unique-block hits/misses/bytes to the first query
         # that asked for each block (hit_mask is in first-appearance
@@ -508,6 +518,11 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
         pool_ids_cols.append(pcol_i)
         pool_d_cols.append(pcol_d)
         compute_s += time.perf_counter() - t_hop
+        if hop_sp is not None:
+            hop_sp.annotate(syscalls=int(n_sys),
+                            misses=int((~hit_mask).sum()),
+                            fresh=int(f_ids.size))
+            hop_sp.end()
     # the hop loop's compute_s included the fetch waits; carve them out
     compute_s = max(0.0, compute_s - blocked_s)
     out = np.full((nq, k), -1, np.int64)
@@ -549,8 +564,16 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
             nodes = np.asarray(need_nodes, dtype=np.int64)
             nqi = np.asarray([pr[0] for pr in need_pairs], dtype=np.int64)
             blk_off, inner = host._frontier_offsets(nodes)
+            rr_sp = obs_trace.begin("traversal.rerank",
+                                    nodes=int(nodes.size)) \
+                if _tracing else None
             t_f = time.perf_counter()
-            blocks, hit_mask, n_sys = cache.fetch(blk_off)
+            if rr_sp is None:
+                blocks, hit_mask, n_sys = cache.fetch(blk_off)
+            else:
+                with obs_trace.activate(rr_sp):
+                    blocks, hit_mask, n_sys = cache.fetch(blk_off)
+                rr_sp.end()
             blocked_s += time.perf_counter() - t_f
             uq = nqi[np.sort(np.unique(blk_off, return_index=True)[1])]
             np.add.at(hit_a, uq[hit_mask], 1)
@@ -613,6 +636,12 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
     stats[0].compute_s = compute_s
     stats[0].pipelined = int(was_pipelined)
     stats[0].degraded = int(degraded)
+    # SearchStats -> histograms: a pool-attached handle publishes hop /
+    # I/O / blocked-vs-compute DISTRIBUTIONS per corpus (obs.metrics
+    # SearchMetrics); bare HostIndex loads skip this with one getattr
+    sm = getattr(host, "metrics", None)
+    if sm is not None:
+        sm.observe_batch(stats, wall, blocked_s, compute_s)
     return out, stats
 
 

@@ -41,6 +41,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.obs.metrics import merge_snapshots
 from repro.serving import protocol as proto
 
 __all__ = ["WorkerSpec", "ShardCluster", "serve_worker"]
@@ -67,6 +68,12 @@ class WorkerSpec:
     gap: Optional[object] = None
     drain_s: float = 2.0               # SIGTERM queue-drain budget
     default_deadline_s: float = 30.0   # requests that carry no deadline
+    # observability knobs (see docs/observability.md)
+    trace_sample: float = 1.0          # fraction of REMOTE traces served;
+    #                                    router-side sampling is the primary
+    #                                    knob, this one sheds worker cost
+    slow_query_s: Optional[float] = None   # slow-query log threshold
+    slow_log_path: Optional[str] = None    # JSONL file for slow span trees
 
 
 def _json_safe(obj):
@@ -95,6 +102,8 @@ def serve_worker(spec: WorkerSpec):          # pragma: no cover — subprocess
     opens one connection per router thread for parallelism)."""
     import numpy as np  # closed over by the handlers below
 
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import Tracer
     from repro.serving.engine import make_host_search_dist_fn
     from repro.serving.pool import CorpusUnhealthyError, WarmIndexPool
     from repro.serving.service import (BackpressureError, RetrievalService,
@@ -113,8 +122,12 @@ def serve_worker(spec: WorkerSpec):          # pragma: no cover — subprocess
     listener.listen(64)
     listener.settimeout(0.2)
 
+    registry = MetricsRegistry()
+    tracer = Tracer(sample=spec.trace_sample,
+                    slow_threshold_s=spec.slow_query_s,
+                    slow_log_path=spec.slow_log_path)
     pool = WarmIndexPool(spec.corpora, budget_bytes=spec.budget_bytes,
-                         cache_bytes=spec.cache_bytes)
+                         cache_bytes=spec.cache_bytes, registry=registry)
     service = RetrievalService(
         pool, num_workers=spec.threads, max_batch=spec.max_batch,
         max_wait_ms=spec.max_wait_ms, max_queue_depth=spec.max_queue_depth,
@@ -129,13 +142,23 @@ def serve_worker(spec: WorkerSpec):          # pragma: no cover — subprocess
 
     def handle_search(conn, header, blob):
         req_id = int(header.get("req_id", -1))
+        wspan = None
         try:
             q = proto.decode_query(header, blob)
+            tctx = proto.trace_context(header)
+            if tctx is not None and tracer.sampled():
+                # continue the router's trace: this span + everything the
+                # service/traversal nests under it ships back on T_RESULT
+                wspan = tracer.start_remote(
+                    "worker.serve", tctx,
+                    annotations=dict(shard=spec.shard_id,
+                                     pid=os.getpid()))
             deadline = header.get("deadline_s")
             wait_s = float(deadline) if deadline is not None \
                 else spec.default_deadline_s
             r = service.submit(q, corpus=header.get("corpus", "default"),
-                               k=int(header["k"]), deadline_s=wait_s)
+                               k=int(header["k"]), deadline_s=wait_s,
+                               span=wspan)
             if not r.event.wait(wait_s + 0.05):
                 raise TimeoutError(
                     f"request not served within {wait_s}s")
@@ -144,11 +167,20 @@ def serve_worker(spec: WorkerSpec):          # pragma: no cover — subprocess
             ids = np.asarray(r.result, dtype=np.int64)
             dists = r.dists if r.dists is not None \
                 else np.full(ids.shape, np.inf, np.float32)
-            h, b = proto.encode_result(ids, dists, req_id=req_id)
+            spans = None
+            if wspan is not None:
+                wspan.end()
+                spans = tracer.take(wspan.trace_id)
+                wspan = None
+            h, b = proto.encode_result(ids, dists, req_id=req_id,
+                                       spans=spans)
             proto.send_frame(conn, proto.T_RESULT, h, b)
         except (BackpressureError, CorpusUnhealthyError,
                 ServiceClosedError, TimeoutError, KeyError,
                 ValueError, OSError) as e:
+            if wspan is not None:      # error frames carry no spans;
+                wspan.end()            # discard rather than leak
+                tracer.take(wspan.trace_id)
             # clean per-request rejection: the request RESOLVES with a
             # typed error frame — the never-silently-short contract
             proto.send_frame(conn, proto.T_ERROR,
@@ -469,8 +501,16 @@ class ShardCluster:
 
     def stats(self) -> dict:
         """Supervisor telemetry: per-shard state machine + respawn
-        accounting (the cluster half of the serving dashboard; each
-        worker's serving telemetry rides T_STATS via worker_stats)."""
+        accounting, plus ONE cluster-wide metrics view — each serving
+        worker's registry snapshot rides T_STATS and is merged here
+        (counters sum, histogram buckets add, percentiles recomputed),
+        so `stats()["registry"]` reads like a single process served the
+        whole cluster."""
+        regs = []
+        for ws in self._workers:
+            w = self.worker_stats(ws.spec.shard_id)
+            if w and isinstance(w.get("registry"), dict):
+                regs.append(w["registry"])
         return dict(
             n_shards=self.n_shards,
             serving=sum(ws.state == "serving" for ws in self._workers),
@@ -486,4 +526,5 @@ class ShardCluster:
             ) for ws in self._workers},
             events=[dict(t=t, shard=s, what=w)
                     for t, s, w in list(self.events)],
+            registry=merge_snapshots(regs) if regs else None,
         )

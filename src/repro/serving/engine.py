@@ -191,6 +191,10 @@ class Request:
     # the request (TimeoutError, `expired` telemetry) once it has passed —
     # an abandoned submit_wait must not burn search capacity
     deadline: Optional[float] = None
+    # obs.trace.Span this request belongs to (None for untraced traffic);
+    # the service activates it around the batch so traversal-hop and
+    # block-cache spans parent onto the query's trace
+    span: Optional[object] = None
 
     @property
     def latency_s(self) -> float:

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.index_io import HostIndex
 from repro.core.wal import WAL_NAME
+from repro.obs.metrics import MetricsRegistry, SearchMetrics
 
 
 class CorpusUnhealthyError(RuntimeError):
@@ -102,7 +103,15 @@ class WarmIndexPool:
                  quarantine_cooldown_s: float = 1.0,
                  quarantine_cooldown_max_s: float = 30.0,
                  probe_timeout_s: float = 10.0,
-                 preadv_factory: Optional[Callable] = None):
+                 preadv_factory: Optional[Callable] = None,
+                 registry: Optional[MetricsRegistry] = None):
+        # one registry per process side by default; a RetrievalService
+        # built over this pool shares it, and every open handle gets a
+        # SearchMetrics bundle into it (per-corpus traversal histograms)
+        self.registry = registry or MetricsRegistry()
+        self._h_load = self.registry.histogram(
+            "pool_load_seconds",
+            help="cold index open / swap load time", unit="seconds")
         self.paths: Dict[str, str] = dict(paths or {})
         self.budget_bytes = budget_bytes
         self.max_open = max_open
@@ -274,6 +283,11 @@ class WarmIndexPool:
             shared = self._peek_shared(path, share_centroids)
             idx = self._load_handle(name, path, shared)
             load_s = time.perf_counter() - t0
+            self._h_load.observe(load_s)
+            # per-corpus traversal histograms (hops, blocked vs compute,
+            # batch latency): core.traversal feeds them when the handle
+            # carries this bundle
+            idx.metrics = SearchMetrics(self.registry, name)
         except BaseException:
             with self._lock:
                 self._loading.discard(name)
@@ -445,6 +459,8 @@ class WarmIndexPool:
             shared = self._peek_shared(new_path, share_centroids)
             idx = self._load_handle(name, new_path, shared)
             load_s = time.perf_counter() - t0
+            self._h_load.observe(load_s)
+            idx.metrics = SearchMetrics(self.registry, name)
         except BaseException:
             with self._lock:
                 self._loading.discard(name)
@@ -623,6 +639,27 @@ class WarmIndexPool:
                     crc_mismatches=crc_mm,
                     crc_rereads=crc_rr,
                 )
+                # CacheCounters -> registry: published at snapshot time
+                # as gauges (the counters object stays the hot-path
+                # store; the registry is the exposition surface)
+                lbl = {"corpus": n}
+                for g, v in (("cache_hit_rate", caches[n]["hit_rate"]),
+                             ("cache_demand_syscalls", syscalls),
+                             ("cache_prefetch_syscalls", pf_syscalls),
+                             ("cache_prefetch_hits", pf_hits),
+                             ("cache_prefetch_wasted", pf_wasted),
+                             ("cache_prefetch_errors", pf_errors),
+                             ("cache_read_retries", retries),
+                             ("cache_crc_mismatches", crc_mm)):
+                    self.registry.gauge(g, lbl).set(v)
+            for g, v in (("pool_open", len(entries)),
+                         ("pool_hits", self.hits),
+                         ("pool_misses", self.misses),
+                         ("pool_evictions", self.evictions),
+                         ("pool_swaps", self.swaps),
+                         ("pool_used_bytes", used),
+                         ("pool_retired", len(self._retired))):
+                self.registry.gauge(g).set(v)
             return dict(
                 open=len(entries),
                 registered=len(self.paths),

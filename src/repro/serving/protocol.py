@@ -44,6 +44,7 @@ __all__ = [
     "T_STATS", "T_STATS_REPLY", "T_SHUTDOWN",
     "pack_frame", "send_frame", "recv_frame",
     "encode_query", "decode_query", "encode_result", "decode_result",
+    "trace_context",
 ]
 
 # frame types
@@ -132,13 +133,34 @@ def recv_frame(sock) -> Tuple[int, dict, bytes]:
 
 
 def encode_query(q: np.ndarray, *, corpus: str, k: int, req_id: int,
-                 deadline_s: Optional[float]) -> Tuple[dict, bytes]:
+                 deadline_s: Optional[float],
+                 trace: Optional[dict] = None) -> Tuple[dict, bytes]:
+    """`trace` is an optional {tid, sid} span context (obs.trace): it
+    rides the JSON header, so old receivers ignore it and old senders
+    simply never trace — the frame format itself is unchanged."""
     q = np.ascontiguousarray(q, dtype=np.float32)
     header = dict(req_id=req_id, corpus=corpus, k=int(k),
                   dim=int(q.shape[-1]),
                   deadline_s=(None if deadline_s is None
                               else float(deadline_s)))
+    if trace is not None:
+        header["trace"] = dict(tid=str(trace["tid"]),
+                               sid=str(trace["sid"]))
     return header, q.tobytes()
+
+
+def trace_context(header: dict) -> Optional[dict]:
+    """The span context a query frame carries, or None.  Malformed
+    contexts (wrong shape, non-string ids) are treated as absent — a
+    corrupted optional field must degrade to an untraced query, never
+    fail it."""
+    ctx = header.get("trace")
+    if not isinstance(ctx, dict):
+        return None
+    tid, sid = ctx.get("tid"), ctx.get("sid")
+    if not (isinstance(tid, str) and isinstance(sid, str) and tid and sid):
+        return None
+    return dict(tid=tid, sid=sid)
 
 
 def decode_query(header: dict, blob: bytes) -> np.ndarray:
@@ -150,11 +172,16 @@ def decode_query(header: dict, blob: bytes) -> np.ndarray:
     return q
 
 
-def encode_result(ids: np.ndarray, dists: np.ndarray, *, req_id: int
-                  ) -> Tuple[dict, bytes]:
+def encode_result(ids: np.ndarray, dists: np.ndarray, *, req_id: int,
+                  spans: Optional[list] = None) -> Tuple[dict, bytes]:
+    """`spans` is the worker's finished span list for this request's
+    trace (obs.trace dicts) — it rides the JSON header back to the
+    router, which ingests it into the query's trace."""
     ids = np.ascontiguousarray(ids, dtype=np.int64)
     dists = np.ascontiguousarray(dists, dtype=np.float32)
     header = dict(req_id=req_id, k=int(ids.shape[-1]))
+    if spans:
+        header["spans"] = list(spans)
     return header, ids.tobytes() + dists.tobytes()
 
 

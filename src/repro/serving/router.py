@@ -41,6 +41,8 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.shard_math import merge_topk
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.serving import protocol as proto
 
 __all__ = ["ShardUnavailableError", "DegradedServiceError", "ShardClient",
@@ -72,8 +74,12 @@ class ShardClient:
     ShardUnavailableError.  Implementations must be thread-safe."""
 
     def search(self, query: np.ndarray, k: int, *, corpus: str = "default",
-               deadline_s: Optional[float] = None
+               deadline_s: Optional[float] = None,
+               trace: Optional[dict] = None
                ) -> Tuple[np.ndarray, np.ndarray]:
+        """`trace` is an obs span context dict ({tid, sid}); a transport
+        that propagates it appends the remote side's finished spans to
+        trace["spans"]."""
         raise NotImplementedError
 
     def reset(self):
@@ -130,13 +136,14 @@ class SocketShardClient(ShardClient):
             self._next_id += 1
             return self._next_id
 
-    def search(self, query, k, *, corpus="default", deadline_s=None):
+    def search(self, query, k, *, corpus="default", deadline_s=None,
+               trace=None):
         rid = self._req_id()
         try:
             sock = self._conn(deadline_s)
             h, b = proto.encode_query(np.asarray(query), corpus=corpus,
                                       k=k, req_id=rid,
-                                      deadline_s=deadline_s)
+                                      deadline_s=deadline_s, trace=trace)
             proto.send_frame(sock, proto.T_SEARCH, h, b)
             rtype, header, blob = proto.recv_frame(sock)
         except (proto.ProtocolError, OSError, socket.timeout) as e:
@@ -153,6 +160,10 @@ class SocketShardClient(ShardClient):
             self._drop()               # desynchronized: poison the conn
             raise ShardUnavailableError(
                 f"{self.socket_path}: unexpected frame type {rtype}")
+        if trace is not None and isinstance(header.get("spans"), list):
+            # the worker's finished spans for this trace ride the result
+            # header; hand them to the caller for tracer ingestion
+            trace.setdefault("spans", []).extend(header["spans"])
         try:
             return proto.decode_result(header, blob)
         except proto.ProtocolError as e:
@@ -178,7 +189,8 @@ class LocalShardClient(ShardClient):
         self.fn = fn
         self.name = name
 
-    def search(self, query, k, *, corpus="default", deadline_s=None):
+    def search(self, query, k, *, corpus="default", deadline_s=None,
+               trace=None):
         try:
             ids, dists = self.fn(np.asarray(query), k)
             return np.asarray(ids, np.int64), np.asarray(dists, np.float32)
@@ -216,7 +228,9 @@ class ShardRouter:
                  shard_deadline_s: float = 2.0,
                  hedge_retry: bool = True,
                  endpoints_fn: Optional[Callable[[], List[Optional[str]]]]
-                 = None):
+                 = None,
+                 tracer: Optional[Tracer] = None,
+                 registry: Optional[MetricsRegistry] = None):
         if not clients:
             raise ValueError("router needs at least one shard client")
         self.clients = list(clients)
@@ -227,32 +241,90 @@ class ShardRouter:
         self.shard_deadline_s = float(shard_deadline_s)
         self.hedge_retry = hedge_retry
         self.endpoints_fn = endpoints_fn
+        self.tracer = tracer
+        self.registry = registry or MetricsRegistry()
+        reg = self.registry
+        self._c_queries = reg.counter(
+            "router_queries_total", help="queries accepted by the router")
+        self._c_answers = {
+            o: reg.counter("router_answers_total",
+                           help="routed answers by outcome",
+                           labels={"outcome": o})
+            for o in ("full", "partial", "rejected")}
+        self._c_attempts = {
+            a: reg.counter("router_shard_attempts_total",
+                           help="per-shard attempts by kind",
+                           labels={"attempt": a})
+            for a in ("first", "hedge")}
+        self._c_failures = {
+            a: reg.counter("router_shard_failures_total",
+                           help="failed per-shard attempts by kind",
+                           labels={"attempt": a})
+            for a in ("first", "hedge")}
+        self._c_retry_ok = reg.counter(
+            "router_retry_success_total",
+            help="hedged retries that produced an answer")
+        self._h_latency = reg.histogram(
+            "router_latency_seconds", unit="s",
+            help="end-to-end routed query latency")
+        self._h_attempt = {
+            a: reg.histogram("router_attempt_latency_seconds", unit="s",
+                             help="per-shard attempt latency by kind "
+                                  "(hedge vs first shows hedge payoff)",
+                             labels={"attempt": a})
+            for a in ("first", "hedge")}
         self._pool = ThreadPoolExecutor(
             max_workers=max(2, len(self.clients)),
             thread_name_prefix="router-scatter")
-        self._lock = threading.Lock()
-        self._tel = dict(queries=0, full=0, partial=0, rejected=0,
-                         shard_attempts=0, shard_failures=0, retries=0,
-                         retry_successes=0)
 
     # -- per-shard attempt ---------------------------------------------------
-    def _ask(self, shard: int, query, k, corpus
+    def _attempt(self, shard: int, query, k, corpus, kind: str,
+                 root_span=None):
+        """One timed transport attempt ('first' | 'hedge').  Returns
+        (ids, dists) or None; never raises."""
+        client = self.clients[shard]
+        self._c_attempts[kind].inc()
+        ctx = None
+        sp = None
+        if root_span is not None:
+            sp = root_span.tracer.start_span(
+                f"router.shard{shard}", parent=root_span,
+                annotations=dict(shard=shard, attempt=kind, corpus=corpus))
+            ctx = root_span.tracer.context(sp)
+        t0 = time.perf_counter()
+        try:
+            out = client.search(query, k, corpus=corpus,
+                                deadline_s=self.shard_deadline_s,
+                                trace=ctx)
+            self._h_attempt[kind].observe(time.perf_counter() - t0)
+            if sp is not None:
+                sp.annotate(ok=True)
+            return out
+        except ShardUnavailableError as e:
+            self._h_attempt[kind].observe(time.perf_counter() - t0)
+            self._c_failures[kind].inc()
+            if sp is not None:
+                sp.annotate(ok=False, error=str(e))
+            return None
+        finally:
+            if sp is not None:
+                sp.end()
+                if ctx and ctx.get("spans"):
+                    root_span.tracer.ingest(ctx["spans"])
+
+    def _ask(self, shard: int, query, k, corpus, root_span=None
              ) -> Tuple[Optional[Tuple[np.ndarray, np.ndarray]], bool]:
         """One shard's answer with up to one hedged retry.
         Returns ((ids, dists) | None, retried)."""
-        client = self.clients[shard]
-        with self._lock:
-            self._tel["shard_attempts"] += 1
-        try:
-            return client.search(query, k, corpus=corpus,
-                                 deadline_s=self.shard_deadline_s), False
-        except ShardUnavailableError:
-            with self._lock:
-                self._tel["shard_failures"] += 1
-            if not self.hedge_retry:
-                return None, False
+        out = self._attempt(shard, query, k, corpus, "first",
+                            root_span=root_span)
+        if out is not None:
+            return out, False
+        if not self.hedge_retry:
+            return None, False
         # hedged retry: re-resolve the endpoint first — the supervisor
         # may have respawned the worker since the failed attempt
+        client = self.clients[shard]
         if self.endpoints_fn is not None:
             eps = self.endpoints_fn()
             ep = eps[shard] if shard < len(eps) else None
@@ -262,19 +334,11 @@ class ShardRouter:
                     and ep != client.socket_path:
                 client.socket_path = ep
             client.reset()
-        with self._lock:
-            self._tel["retries"] += 1
-            self._tel["shard_attempts"] += 1
-        try:
-            out = client.search(query, k, corpus=corpus,
-                                deadline_s=self.shard_deadline_s)
-            with self._lock:
-                self._tel["retry_successes"] += 1
-            return out, True
-        except ShardUnavailableError:
-            with self._lock:
-                self._tel["shard_failures"] += 1
-            return None, True
+        out = self._attempt(shard, query, k, corpus, "hedge",
+                            root_span=root_span)
+        if out is not None:
+            self._c_retry_ok.inc()
+        return out, True
 
     # -- public API ----------------------------------------------------------
     def search(self, query: np.ndarray, k: int, *,
@@ -282,42 +346,83 @@ class ShardRouter:
         """Scatter `query` to every shard, gather within the per-shard
         deadline, merge.  Raises DegradedServiceError below quorum."""
         t0 = time.perf_counter()
-        with self._lock:
-            self._tel["queries"] += 1
-        futs = [self._pool.submit(self._ask, s, query, k, corpus)
-                for s in range(len(self.clients))]
-        parts_ids: List[np.ndarray] = []
-        parts_dists: List[np.ndarray] = []
-        failed: List[int] = []
-        retried: List[int] = []
-        for s, f in enumerate(futs):
-            out, did_retry = f.result()   # _ask never raises; bounded by
-            if did_retry:                 # 2x shard deadline + connect
-                retried.append(s)
-            if out is None:
-                failed.append(s)
-            else:
-                parts_ids.append(out[0])
-                parts_dists.append(out[1])
-        answered = len(self.clients) - len(failed)
-        if answered < self.min_shards:
-            with self._lock:
-                self._tel["rejected"] += 1
-            raise DegradedServiceError(answered, len(self.clients),
-                                       self.min_shards)
-        ids, dists = merge_topk(parts_ids, parts_dists, k)
-        partial = bool(failed)
-        with self._lock:
-            self._tel["partial" if partial else "full"] += 1
-        return RouterResult(ids=ids, dists=dists, partial=partial,
-                            shards_answered=answered,
-                            shards_failed=len(failed),
-                            failed_shards=failed, retried_shards=retried,
-                            latency_s=time.perf_counter() - t0)
+        self._c_queries.inc()
+        root = None
+        if self.tracer is not None and self.tracer.sampled():
+            root = self.tracer.start_span(
+                "router.search",
+                annotations=dict(corpus=corpus, k=int(k),
+                                 shards=len(self.clients)))
+        try:
+            futs = [self._pool.submit(self._ask, s, query, k, corpus, root)
+                    for s in range(len(self.clients))]
+            parts_ids: List[np.ndarray] = []
+            parts_dists: List[np.ndarray] = []
+            failed: List[int] = []
+            retried: List[int] = []
+            for s, f in enumerate(futs):
+                out, did_retry = f.result()  # _ask never raises; bounded by
+                if did_retry:                # 2x shard deadline + connect
+                    retried.append(s)
+                if out is None:
+                    failed.append(s)
+                else:
+                    parts_ids.append(out[0])
+                    parts_dists.append(out[1])
+            answered = len(self.clients) - len(failed)
+            if answered < self.min_shards:
+                self._c_answers["rejected"].inc()
+                if root is not None:
+                    root.annotate(outcome="rejected", answered=answered)
+                raise DegradedServiceError(answered, len(self.clients),
+                                           self.min_shards)
+            ids, dists = merge_topk(parts_ids, parts_dists, k)
+            partial = bool(failed)
+            self._c_answers["partial" if partial else "full"].inc()
+            lat = time.perf_counter() - t0
+            self._h_latency.observe(lat)
+            if root is not None:
+                root.annotate(outcome="partial" if partial else "full",
+                              answered=answered, failed=len(failed))
+            return RouterResult(ids=ids, dists=dists, partial=partial,
+                                shards_answered=answered,
+                                shards_failed=len(failed),
+                                failed_shards=failed,
+                                retried_shards=retried,
+                                latency_s=lat)
+        finally:
+            if root is not None:
+                root.end()
 
     def stats(self) -> dict:
-        with self._lock:
-            return dict(self._tel)
+        """Compat view over the registry: the historical flat-counter
+        shape plus the first/hedge latency split and a full snapshot."""
+        first = self._h_attempt["first"]
+        hedge = self._h_attempt["hedge"]
+
+        def _lat(h):
+            if not h.count:
+                return None
+            return dict(count=int(h.count),
+                        mean_ms=h.sum / h.count * 1e3,
+                        p50_ms=(h.quantile(0.50) or 0.0) * 1e3,
+                        p99_ms=(h.quantile(0.99) or 0.0) * 1e3)
+
+        out = dict(
+            queries=int(self._c_queries.value),
+            full=int(self._c_answers["full"].value),
+            partial=int(self._c_answers["partial"].value),
+            rejected=int(self._c_answers["rejected"].value),
+            shard_attempts=int(self._c_attempts["first"].value
+                               + self._c_attempts["hedge"].value),
+            shard_failures=int(self._c_failures["first"].value
+                               + self._c_failures["hedge"].value),
+            retries=int(self._c_attempts["hedge"].value),
+            retry_successes=int(self._c_retry_ok.value),
+            attempt_latency=dict(first=_lat(first), hedge=_lat(hedge)),
+        )
+        out["registry"] = self.registry.snapshot()
+        return out
 
     def close(self):
         self._pool.shutdown(wait=False)

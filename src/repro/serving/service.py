@@ -28,6 +28,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import COUNT_BUCKETS, MetricsRegistry, merged_quantile
 from repro.serving.engine import Request, make_host_search_fn
 from repro.serving.pool import CorpusUnhealthyError, WarmIndexPool
 
@@ -56,28 +58,45 @@ class ServiceClosedError(RuntimeError):
     instead of a dropped connection."""
 
 
-_LATENCY_WINDOW = 4096       # percentile window per corpus (bounded memory)
-
-
 class _CorpusTelemetry:
-    __slots__ = ("completed", "rejected", "batches", "switches",
-                 "switch_s", "latencies", "first_submit", "last_done",
-                 "errors", "expired", "unhealthy_rejected")
+    """Per-corpus series handles into the service's MetricsRegistry.
 
-    def __init__(self):
-        self.completed = 0
-        self.rejected = 0
-        self.batches = 0
-        self.switches = 0
-        self.switch_s = 0.0
-        # bounded ring: a long-lived service must not grow per-request
-        # state; percentiles are over the most recent window
-        self.latencies: deque = deque(maxlen=_LATENCY_WINDOW)
+    The registry is the single source of truth (bounded memory by
+    construction: fixed-bucket histograms, no per-request state);
+    `stats()` renders the legacy dict shape as a thin view over these
+    handles, and percentiles are bucket-derived instead of sampled from
+    a latency ring."""
+
+    __slots__ = ("completed", "rejected", "errors", "expired",
+                 "unhealthy_rejected", "batches", "latency", "batch_size",
+                 "switch", "queue_depth", "first_submit", "last_done")
+
+    def __init__(self, reg: MetricsRegistry, corpus: str):
+        lbl = {"corpus": corpus}
+        def outcome(o):
+            return reg.counter("service_requests_total",
+                               {**lbl, "outcome": o},
+                               help="request outcomes per corpus")
+        self.completed = outcome("completed")
+        self.rejected = outcome("rejected")            # backpressure
+        self.errors = outcome("error")
+        self.expired = outcome("expired")              # deadline at assembly
+        self.unhealthy_rejected = outcome("unhealthy")  # breaker fail-fast
+        self.batches = reg.counter("service_batches_total", lbl,
+                                   help="batches served per corpus")
+        self.latency = reg.histogram(
+            "service_latency_seconds", lbl,
+            help="submit-to-done request latency", unit="seconds")
+        self.batch_size = reg.histogram(
+            "service_batch_size", lbl, buckets=COUNT_BUCKETS,
+            help="requests per served batch")
+        self.switch = reg.histogram(
+            "service_switch_seconds", lbl,
+            help="pool-miss index load (switch) cost", unit="seconds")
+        self.queue_depth = reg.gauge("service_queue_depth", lbl,
+                                     help="queued requests at snapshot")
         self.first_submit: Optional[float] = None
         self.last_done: Optional[float] = None
-        self.errors = 0
-        self.expired = 0             # dropped at batch assembly: deadline hit
-        self.unhealthy_rejected = 0  # fail-fast submits on quarantined corpus
 
 
 class RetrievalService:
@@ -90,8 +109,13 @@ class RetrievalService:
                  rerank: Optional[int] = None, adc_dtype: str = "f32",
                  prefetch: int = 0, pipeline: Optional[bool] = None,
                  gap=None,
-                 search_fn: Optional[Callable] = None):
+                 search_fn: Optional[Callable] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.pool = pool
+        # share the pool's registry by default so one snapshot carries
+        # the whole process (service + pool + per-corpus search/cache)
+        self.registry = registry or getattr(pool, "registry", None) \
+            or MetricsRegistry()
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self.max_queue_depth = max_queue_depth
@@ -132,15 +156,18 @@ class RetrievalService:
             pipeline=self.pipeline, gap=self.gap)(queries, k)
 
     def submit(self, query: np.ndarray, corpus: str = "default", k: int = 10,
-               deadline_s: Optional[float] = None) -> Request:
+               deadline_s: Optional[float] = None,
+               span: Optional[object] = None) -> Request:
         """Queue one request.  `deadline_s` (seconds from now) attaches a
         drop-dead time: a worker assembling a batch skips the request once
         it has passed (TimeoutError on the request, `expired` telemetry)
-        instead of serving it into the void.  Raises CorpusUnhealthyError
-        when the corpus is quarantined (fail fast) and BackpressureError
-        at the admission depth."""
+        instead of serving it into the void.  `span` (obs.trace.Span)
+        ties the request to a query trace: the serving batch, traversal
+        hops, and cache reads parent onto it.  Raises
+        CorpusUnhealthyError when the corpus is quarantined (fail fast)
+        and BackpressureError at the admission depth."""
         self.pool._resolve(corpus)       # one source of the naming KeyError
-        r = Request(query=query, corpus=corpus, k=k)
+        r = Request(query=query, corpus=corpus, k=k, span=span)
         if deadline_s is not None:
             r.deadline = r.t_submit + float(deadline_s)
         with self._cond:
@@ -150,15 +177,15 @@ class RetrievalService:
             if q is None:
                 q = self._queues[corpus] = deque()
                 self._rr.append(corpus)
-                self._tel[corpus] = _CorpusTelemetry()
+                self._tel[corpus] = _CorpusTelemetry(self.registry, corpus)
             tel = self._tel[corpus]
             try:
                 self.pool.admit(corpus)  # circuit breaker: fail fast
             except CorpusUnhealthyError:
-                tel.unhealthy_rejected += 1
+                tel.unhealthy_rejected.inc()
                 raise
             if len(q) >= self.max_queue_depth:
-                tel.rejected += 1
+                tel.rejected.inc()
                 raise BackpressureError(corpus, len(q), self.max_queue_depth)
             if tel.first_submit is None:
                 tel.first_submit = r.t_submit
@@ -203,7 +230,7 @@ class RetrievalService:
         """Fail one deadline-passed request (lock held): the submitter
         already gave up — serving it would burn a search slot into the
         void AND count it `completed` (the abandoned-request bug)."""
-        self._tel[r.corpus].expired += 1
+        self._tel[r.corpus].expired.inc()
         r.error = TimeoutError(
             f"request to corpus {r.corpus!r} expired before service")
         r.t_done = now
@@ -261,13 +288,25 @@ class RetrievalService:
         ids = None
         dists = None
         load_s = 0.0
+        # one batch serves at most one trace's spans: the first traced
+        # request wins (mixed batches annotate how many rode along)
+        tspan = next((r.span for r in batch if r.span is not None), None)
+        bspan = None
+        if tspan is not None:
+            bspan = tspan.tracer.start_span(
+                "service.batch", parent=tspan,
+                annotations=dict(
+                    corpus=corpus, batch=len(batch),
+                    traced=sum(r.span is not None for r in batch),
+                    queue_wait_s=time.perf_counter() - batch[0].t_submit))
         try:
             # inside the try: a malformed query (ragged dims) must fail the
             # batch, not kill the worker thread
             queries = np.stack([r.query for r in batch])
             k = max(r.k for r in batch)
-            with self.pool.lease(corpus) as (idx, load_s):
-                out = self._search_fn(idx, queries, k)
+            with obs_trace.activate(bspan):
+                with self.pool.lease(corpus) as (idx, load_s):
+                    out = self._search_fn(idx, queries, k)
             # a search_fn may return (ids, dists) — cluster shard workers
             # do, because the scatter-gather merge needs exact scores
             if isinstance(out, tuple):
@@ -295,75 +334,85 @@ class RetrievalService:
             self.pool.record_success(corpus)
         elif isinstance(err, OSError):
             self.pool.record_io_failure(corpus)
-        now = time.perf_counter()
+        if bspan is not None:
+            bspan.annotate(load_s=load_s,
+                           error=(type(err).__name__ if err else None))
+            bspan.end()                  # before event.set(): the worker
+        now = time.perf_counter()        # ships spans once the event fires
         with self._cond:
             tel = self._tel[corpus]
-            tel.batches += 1
+            tel.batches.inc()
+            tel.batch_size.observe(len(batch))
             if load_s:
-                tel.switches += 1
-                tel.switch_s += load_s
+                tel.switch.observe(load_s)
             for i, r in enumerate(batch):
                 r.t_done = now
                 if err is not None:
                     r.error = err
-                    tel.errors += 1
+                    tel.errors.inc()
                 else:
                     r.result = ids[i, :r.k]
                     if dists is not None:
                         r.dists = dists[i, :r.k]
-                    tel.completed += 1
-                    tel.latencies.append(r.latency_s)
+                    tel.completed.inc()
+                    tel.latency.observe(r.latency_s)
                 tel.last_done = now
                 r.event.set()
 
     # -- telemetry -----------------------------------------------------------
     def stats(self) -> dict:
+        """Legacy dict shape, rendered as a thin view over the metrics
+        registry (percentiles are histogram-bucket-derived), plus the
+        full registry snapshot under ``"registry"`` — the mergeable form
+        T_STATS carries to the cluster supervisor."""
         with self._cond:
             corpora = {}
             for c, tel in self._tel.items():
-                lat = np.asarray(tel.latencies, dtype=np.float64)
+                completed = int(tel.completed.value)
+                batches = int(tel.batches.value)
                 span = None
                 if tel.first_submit is not None and tel.last_done is not None:
                     span = max(tel.last_done - tel.first_submit, 1e-9)
+                tel.queue_depth.set(len(self._queues.get(c, ())))
+                lat = tel.latency
                 corpora[c] = dict(
-                    completed=tel.completed,
-                    rejected=tel.rejected,
-                    errors=tel.errors,
-                    expired=tel.expired,
-                    unhealthy_rejected=tel.unhealthy_rejected,
-                    batches=tel.batches,
-                    mean_batch=(tel.completed / tel.batches
-                                if tel.batches else 0.0),
-                    switches=tel.switches,
-                    switch_ms_total=tel.switch_s * 1e3,
-                    qps=(tel.completed / span if span else 0.0),
+                    completed=completed,
+                    rejected=int(tel.rejected.value),
+                    errors=int(tel.errors.value),
+                    expired=int(tel.expired.value),
+                    unhealthy_rejected=int(tel.unhealthy_rejected.value),
+                    batches=batches,
+                    mean_batch=(completed / batches if batches else 0.0),
+                    switches=tel.switch.count,
+                    switch_ms_total=tel.switch.sum * 1e3,
+                    qps=(completed / span if span else 0.0),
                     queued=len(self._queues.get(c, ())),
-                    **({"p50_ms": float(np.percentile(lat, 50) * 1e3),
-                        "p95_ms": float(np.percentile(lat, 95) * 1e3),
-                        "p99_ms": float(np.percentile(lat, 99) * 1e3)}
-                       if lat.size else {}))
-            all_lat = np.concatenate(
-                [np.asarray(t.latencies) for t in self._tel.values()]
-            ) if any(t.latencies for t in self._tel.values()) else \
-                np.zeros(0)
-            total_done = sum(t.completed for t in self._tel.values())
+                    **({"p50_ms": lat.quantile(0.50) * 1e3,
+                        "p95_ms": lat.quantile(0.95) * 1e3,
+                        "p99_ms": lat.quantile(0.99) * 1e3}
+                       if lat.count else {}))
+            tels = list(self._tel.values())
+            p50 = merged_quantile([t.latency for t in tels], 0.50)
+            p99 = merged_quantile([t.latency for t in tels], 0.99)
             out = dict(
                 corpora=corpora,
-                total_completed=total_done,
-                total_rejected=sum(t.rejected for t in self._tel.values()),
-                total_expired=sum(t.expired for t in self._tel.values()),
+                total_completed=sum(int(t.completed.value) for t in tels),
+                total_rejected=sum(int(t.rejected.value) for t in tels),
+                total_expired=sum(int(t.expired.value) for t in tels),
                 total_unhealthy_rejected=sum(
-                    t.unhealthy_rejected for t in self._tel.values()),
-                total_switches=sum(t.switches for t in self._tel.values()),
+                    int(t.unhealthy_rejected.value) for t in tels),
+                total_switches=sum(t.switch.count for t in tels),
                 uptime_s=time.perf_counter() - self._t0,
-                **({"p50_ms": float(np.percentile(all_lat, 50) * 1e3),
-                    "p99_ms": float(np.percentile(all_lat, 99) * 1e3)}
-                   if all_lat.size else {}))
+                **({"p50_ms": p50 * 1e3, "p99_ms": p99 * 1e3}
+                   if p50 is not None else {}))
         # pool snapshot taken OUTSIDE the service lock: the pool does its
         # own single-pass consistent capture under its own lock, and the
         # service never holds both locks at once (no ordering to get
-        # wrong against serve-path pool calls)
+        # wrong against serve-path pool calls).  The pool publishes its
+        # gauges into the shared registry during stats(), so the registry
+        # snapshot below already carries them.
         out["pool"] = self.pool.stats()
+        out["registry"] = self.registry.snapshot()
         return out
 
     # -- lifecycle -----------------------------------------------------------
