@@ -35,7 +35,14 @@ PQ_ITERS = 8                      # codebook k-means iters (also stamped)
 # bump when write_index's on-disk layout changes: stamps embed it, so a
 # format change rebuilds every cached index
 # v2: checksummed format (block_crc.npy sidecar + format_version in meta)
-FMT_VERSION = 2
+# v3: optional navigation-tier sidecar (nav_graph.npz + "nav" meta key)
+FMT_VERSION = 3
+
+# navigation-tier build knobs for the nav-twin indices (stamped, so a
+# change here rebuilds the *_nav directories)
+NAV_FRACTION = 0.02
+NAV_DEGREE = 8
+NAV_SEED = 0
 
 
 # -- build-params stamping ---------------------------------------------------
@@ -114,17 +121,22 @@ def graph(base):
     return g
 
 
-def index_path(mode: str, m: int, relabel: bool = False) -> str:
-    return os.path.join(IDX, f"{mode}_m{m}" + ("_rl" if relabel else ""))
+def index_path(mode: str, m: int, relabel: bool = False,
+               nav: bool = False) -> str:
+    return os.path.join(IDX, f"{mode}_m{m}" + ("_rl" if relabel else "")
+                        + ("_nav" if nav else ""))
 
 
 def ensure_indices(ms=(DEFAULT_M,), modes=("aisaq", "diskann"),
-                   shared_centroids_for=None, relabel=False):
+                   shared_centroids_for=None, relabel=False, nav=False):
     """Build (cached) indices for each (mode, m). Returns paths dict.
 
     `relabel=True` builds the graph-locality-relabeled twins (same graph,
     same codes, permuted placement) into separate `*_rl` directories so
     the cold-path benchmark can compare the two layouts directly.
+    `nav=True` additionally builds the navigation-tier sidecar into
+    `*_nav` twins (same graph/codes/placement, plus the pivot graph) so
+    nav-vs-medoid entry seeding is an apples-to-apples comparison.
 
     Each index dir is stamped with its build params (`build_params.json`);
     a stamp mismatch — knob change, format bump, upstream corpus/graph
@@ -139,11 +151,14 @@ def ensure_indices(ms=(DEFAULT_M,), modes=("aisaq", "diskann"),
     for m in ms:
         cache = {}
         for mode in modes:
-            p = index_path(mode, m, relabel)
+            p = index_path(mode, m, relabel, nav)
             paths[(mode, m)] = p
             params = dict(fmt=FMT_VERSION, graph=_params_hash(
                 _graph_params()), mode=mode, m=m, relabel=bool(relabel),
                 metric="l2", pq_iters=PQ_ITERS, pq_seed=m)
+            if nav:
+                params.update(nav_fraction=NAV_FRACTION,
+                              nav_degree=NAV_DEGREE, nav_seed=NAV_SEED)
             if os.path.exists(os.path.join(p, "meta.json")) \
                     and _stamp_ok(p, "build_params.json", params):
                 continue
@@ -155,7 +170,8 @@ def ensure_indices(ms=(DEFAULT_M,), modes=("aisaq", "diskann"),
                 cache["codes"] = np.asarray(pq.encode(cb, base))
             write_index(p, vectors=base, graph=g, centroids=cache["cents"],
                         codes=cache["codes"], metric="l2", mode=mode,
-                        relabel=relabel)
+                        relabel=relabel, nav=nav, nav_fraction=NAV_FRACTION,
+                        nav_degree=NAV_DEGREE, nav_seed=NAV_SEED)
             _write_stamp(p, "build_params.json", params)
     return paths
 

@@ -83,6 +83,18 @@ def collect(root: str, ref: str = "HEAD") -> list:
     return out
 
 
+#: Headline keys starred in the rendering — the per-PR acceptance
+#: metrics a reviewer checks first (everything else still prints).
+KEY_METRICS = frozenset((
+    "speedup_warm", "cold_syscalls_reduction_x",
+    "pipeline_blocked_wait_reduction_x", "host_int8_recall_gap",
+    # navigation tier (schema 5): travel-phase hop reduction, the
+    # cold-start latency it buys, and the total-hops ratio
+    "nav_convergence_reduction_pct", "nav_cold_p99_ms",
+    "medoid_cold_p99_ms", "nav_medoid_hops_ratio", "nav_recall10",
+))
+
+
 def _fmt(v) -> str:
     if isinstance(v, float):
         return f"{v:.4g}"
@@ -106,16 +118,18 @@ def render(reports: list, ref: str) -> str:
             lines.append("  no headline dict")
             continue
         for key, val, old, pct in rows:
+            star = "*" if key in KEY_METRICS else " "
             if pct is not None:
                 arrow = "+" if pct >= 0 else ""
-                lines.append(f"  {key:<44} {_fmt(val):>12}  "
+                lines.append(f" {star}{key:<44} {_fmt(val):>12}  "
                              f"(prev {_fmt(old)}, {arrow}{pct:.1f}%)")
             elif old is None:
-                lines.append(f"  {key:<44} {_fmt(val):>12}  (NEW)")
+                lines.append(f" {star}{key:<44} {_fmt(val):>12}  (NEW)")
             elif val == old:
-                lines.append(f"  {key:<44} {_fmt(val):>12}  (unchanged)")
+                lines.append(f" {star}{key:<44} {_fmt(val):>12}  "
+                             "(unchanged)")
             else:
-                lines.append(f"  {key:<44} {_fmt(val):>12}  "
+                lines.append(f" {star}{key:<44} {_fmt(val):>12}  "
                              f"(prev {_fmt(old)}, CHANGED)")
     if not reports:
         lines.append("no BENCH_*.json artifacts found")

@@ -37,29 +37,51 @@ def main():
     for mode in ("aisaq", "diskann"):
         path = os.path.join(root, mode)
         t0 = time.time()
-        meta = build_index(path, base, cfg, mode=mode, seed=0)
+        # nav=True packs the in-RAM navigation tier (docs/navigation.md)
+        # alongside the AiSAQ index; the DiskANN twin stays plain
+        meta = build_index(path, base, cfg, mode=mode, seed=0,
+                           nav=(mode == "aisaq"))
         print(f"\n[{mode}] built in {time.time()-t0:.1f}s  "
               f"chunk={meta['chunk_bytes']}B  io/hop={meta['io_bytes']}B")
         idx = HostIndex.load(path)
         print(f"[{mode}] load time     : {idx.load_time_s*1e3:.2f} ms")
         print(f"[{mode}] resident bytes: {idx.resident_bytes()/1e3:.1f} KB")
-        ids, stats = idx.search_batch(queries, 10, L=48)
+        # entry="medoid" pins the classic fixed-seed traversal so the
+        # AiSAQ/DiskANN comparison stays apples-to-apples (the nav demo
+        # below opts in explicitly)
+        ids, stats = idx.search_batch(queries, 10, L=48, entry="medoid")
         results[mode] = ids
         lat = np.mean([s.latency_s for s in stats]) * 1e3
         print(f"[{mode}] recall@1={recall_at(ids, gt, 1):.3f} "
               f"recall@10={recall_at(ids, gt, 10):.3f} "
               f"mean latency={lat:.2f} ms "
-              f"ios/query={np.mean([s.ios for s in stats]):.0f}")
+              f"ios/query={np.mean([s.ios for s in stats]):.0f} "
+              f"hops/query={np.median([s.hops for s in stats]):.0f} "
+              f"(converged by hop "
+              f"{np.median([s.convergence_hop for s in stats]):.0f})")
         # the pipelined traversal engine (core.traversal): prefetch>0
         # turns on the two-hop in-flight path — identical ids, reads off
         # the critical path; overlap is visible in the lead query's stats
         idx.cache.clear()
-        ids_p, stats_p = idx.search_batch(queries, 10, L=48, prefetch=4)
+        ids_p, stats_p = idx.search_batch(queries, 10, L=48, prefetch=4,
+                                          entry="medoid")
         assert np.array_equal(ids, ids_p)
         print(f"[{mode}] pipelined: blocked wait "
               f"{stats_p[0].blocked_wait_s*1e3:.2f} ms vs compute "
               f"{stats_p[0].compute_s*1e3:.2f} ms (whole batch, "
               f"results identical)")
+        if idx.nav is not None:
+            # the navigation tier: an in-RAM beam over ~2% pivot nodes
+            # replaces the fixed medoid seed with per-query entry
+            # vertices — fewer on-disk hops, zero extra storage I/O
+            ids_n, st_n = idx.search_batch(queries, 10, L=48, entry="nav")
+            print(f"[{mode}] nav entry: hops/query="
+                  f"{np.median([s.hops for s in st_n]):.0f} "
+                  f"(converged by hop "
+                  f"{np.median([s.convergence_hop for s in st_n]):.0f}) "
+                  f"recall@10={recall_at(ids_n, gt, 10):.3f}  "
+                  f"[nav tier: {idx.nav.resident_nbytes()/1e3:.1f} KB, "
+                  f"{idx.nav.params['pivots']} pivots]")
         idx.close()
 
     same = np.array_equal(results["aisaq"], results["diskann"])

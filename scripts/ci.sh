@@ -3,12 +3,16 @@
 #
 # The smoke invocations build tiny corpora from scratch in tempdirs and
 # assert the invariants loudly (batched == scalar reference across
-# {relabel} x {prefetch} x {adc_dtype} x {rerank} x {pipeline}, int8
-# recall parity, pool eviction correctness, admission control, rerank
-# recall dominance).  bench_search --quick additionally guards the
-# pipelined traversal engine: cold-path mean latency and blocked wait of
-# the pipelined path must not regress past the serial path (median-of-3,
-# noise-tolerant) — an overlap regression fails CI here.
+# {entry} x {relabel} x {prefetch} x {adc_dtype} x {rerank} x
+# {pipeline}, int8 recall parity, pool eviction correctness, admission
+# control, rerank recall dominance).  bench_search --quick additionally
+# guards the pipelined traversal engine: cold-path mean latency and
+# blocked wait of the pipelined path must not regress past the serial
+# path (median-of-3, noise-tolerant) — an overlap regression fails CI
+# here.  It also gates the navigation tier: on a tempdir nav index,
+# nav-seeded median hops and hops-to-convergence must not exceed the
+# medoid-seeded medians (hop counts are deterministic per index, so the
+# bound is exact rather than statistical).
 # They deliberately do NOT touch benchmarks/artifacts/bench_idx — CI has
 # no artifact cache and must never pay the 20k-corpus index build; the
 # cached artifacts are only for full local bench runs.

@@ -45,6 +45,7 @@ from repro.core.chunk_layout import ChunkLayout, pack_chunks_file
 from repro.core.integrity import (CRC_SIDECAR, FORMAT_VERSION,
                                   CorruptIndexError, PREFERRED_ALGO,
                                   block_checksums, resolve_crc)
+from repro.core import nav as _nav
 from repro.core import traversal as _traversal
 from repro.core.traversal import SearchStats, recall_at  # noqa: F401
 
@@ -119,6 +120,11 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
                 entry_points: Optional[np.ndarray] = None,
                 relabel: bool = False,
                 labels: Optional[np.ndarray] = None,
+                nav: bool = False,
+                nav_fraction: float = _nav.DEFAULT_FRACTION,
+                nav_degree: int = _nav.DEFAULT_DEGREE,
+                nav_seed: int = 0,
+                nav_method: str = _nav.DEFAULT_METHOD,
                 extra_meta: Optional[dict] = None) -> dict:
     """Serialize one index. Returns the meta dict.
 
@@ -143,8 +149,17 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
     mid-write leaves either the old index or the new one, never a dir
     with a meta.json describing half-written chunks.  Integrity: one
     checksum per I/O unit of chunks.bin lands in the ``block_crc.npy``
-    sidecar (``format_version`` 2); loaders verify every block read
-    against it.
+    sidecar; loaders verify every block read against it.
+
+    ``nav=True`` additionally builds the in-memory navigation tier
+    (``core.nav``): ~``nav_fraction`` of nodes become pivots
+    (``nav_method`` selection, seed-stable in ``nav_seed``), a
+    degree-``nav_degree`` pivot k-NN graph plus the pivots' PQ codes
+    land in the OPTIONAL ``nav_graph.npz`` sidecar (``format_version``
+    3, ``meta["nav"]`` records the params), and query-time searches can
+    use ``entry="nav"`` for per-query entry vertices.  The tier is
+    built AFTER the relabel permutation, so pivot ids are storage-space
+    ids.  See ``docs/navigation.md``.
     """
     path = os.path.normpath(path)
     tmp = path + ".tmp"
@@ -186,6 +201,15 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
     _save_npy(os.path.join(tmp, "pq_codes.npy"), codes.astype(np.uint8))
     _save_npy(os.path.join(tmp, "ep_codes.npy"),
               codes[entry_points].astype(np.uint8))
+    nav_meta = None
+    if nav:
+        # after the relabel block: vectors/codes are in storage order, so
+        # pivot ids land directly in storage-id space
+        nav_obj = _nav.build_nav(vectors, codes, fraction=nav_fraction,
+                                 degree=nav_degree, seed=nav_seed,
+                                 method=nav_method, metric=metric)
+        _nav.save_nav(os.path.join(tmp, _nav.NAV_SIDECAR), nav_obj)
+        nav_meta = nav_obj.params
     cent_hash = int(np.abs(centroids.astype(np.float64)).sum() * 1e6) & 0xFFFFFFFF
     meta = dict(
         n=int(n), dim=int(d), data_dtype=data_dtype, metric=metric, mode=mode,
@@ -194,7 +218,9 @@ def write_index(path: str, *, vectors: np.ndarray, graph: np.ndarray,
         entry_points=[int(e) for e in entry_points],
         chunk_bytes=layout.chunk_bytes, io_bytes=layout.io_bytes,
         centroids_hash=cent_hash, format_version=FORMAT_VERSION,
-        crc_algo=PREFERRED_ALGO, **(extra_meta or {}))
+        crc_algo=PREFERRED_ALGO,
+        **({"nav": nav_meta} if nav_meta is not None else {}),
+        **(extra_meta or {}))
     if id_map is not None:
         # O(N) sidecar, NOT inline json: meta.json must stay ~4 KiB so the
         # shared-centroids index switch (paper §4.4) stays near-free
@@ -278,6 +304,7 @@ class HostIndex:
         self.load_time_s: float = 0.0
         self.cache: Optional[BlockCache] = None
         self.new_to_old: Optional[np.ndarray] = None   # relabeled indices
+        self.nav = None                # optional navigation tier (core.nav)
 
     # -- lifecycle ---------------------------------------------------------
     @classmethod
@@ -334,6 +361,11 @@ class HostIndex:
         else:
             self.centroids = np.load(os.path.join(path, "pq_centroids.npy"))
         self.ep_codes = np.load(os.path.join(path, "ep_codes.npy"))
+        # optional navigation tier: v1/v2 dirs (no "nav" meta key) and
+        # dirs with a damaged sidecar load with the tier disabled —
+        # load_nav warns instead of raising (accelerator, not a
+        # correctness dependency)
+        self.nav = _nav.load_nav(path, self.meta)
         if self.meta.get("label_map") == "direct":
             # explicit per-slot labels (compacted dynamic index): the map
             # is stored directly — it is generally NOT a permutation of
@@ -418,6 +450,11 @@ class HostIndex:
             total += self.centroids.nbytes
         if self.pq_codes is not None:
             total += self.pq_codes.nbytes
+        if self.nav is not None:
+            # the navigation tier pins pivot ids/codes/graph in RAM; it
+            # scales with N (fraction * n) so it IS algorithmic residency
+            # and is charged against the WarmIndexPool DRAM budget
+            total += self.nav.resident_nbytes()
         return int(total)
 
     # -- I/O -----------------------------------------------------------------
@@ -446,53 +483,61 @@ class HostIndex:
 
     # -- search (delegates to the core.traversal engine) --------------------
     def search_ref(self, q: np.ndarray, k: int, L: int, w: int = 4, *,
-                   adc_dtype: str = "f32", rerank: Optional[int] = None
+                   adc_dtype: str = "f32", rerank: Optional[int] = None,
+                   entry: str = "auto"
                    ) -> Tuple[np.ndarray, SearchStats]:
         """Scalar DiskANN beam search (paper Algorithm 1) — the semantics
         oracle the vectorized hot path must match bit-for-bit (per
-        adc_dtype).  See ``core.traversal.search_ref``."""
+        adc_dtype, per entry mode).  See ``core.traversal.search_ref``."""
         ids, stats = _traversal.search_ref(self, q, k, L, w,
                                            adc_dtype=adc_dtype,
-                                           rerank=rerank)
+                                           rerank=rerank, entry=entry)
         return self._map_out(ids), stats
 
     def search_batch_ref(self, Q: np.ndarray, k: int, L: int, w: int = 4, *,
                          adc_dtype: str = "f32",
-                         rerank: Optional[int] = None):
+                         rerank: Optional[int] = None,
+                         entry: str = "auto"):
         """Scalar reference loop (the seed implementation's search_batch)."""
         ids, stats = _traversal.search_batch_ref(self, Q, k, L, w,
                                                  adc_dtype=adc_dtype,
-                                                 rerank=rerank)
+                                                 rerank=rerank, entry=entry)
         return self._map_out(ids), stats
 
     def search(self, q: np.ndarray, k: int, L: int, w: int = 4, *,
                prefetch: int = 0, adc_dtype: str = "f32",
                rerank: Optional[int] = None,
                pipeline: Optional[bool] = None,
-               gap: Optional[Union[int, str]] = None
+               gap: Optional[Union[int, str]] = None,
+               entry: str = "auto"
                ) -> Tuple[np.ndarray, SearchStats]:
         """Vectorized beam search (single query). Bit-identical results to
         `search_ref`; all per-hop work batched (one preadv fetch, one ADC).
         See `search_batch` for the knobs."""
         ids, stats = self.search_batch(q[None], k, L, w, prefetch=prefetch,
                                        adc_dtype=adc_dtype, rerank=rerank,
-                                       pipeline=pipeline, gap=gap)
+                                       pipeline=pipeline, gap=gap,
+                                       entry=entry)
         return ids[0], stats[0]
 
     def search_batch(self, Q: np.ndarray, k: int, L: int, w: int = 4, *,
                      prefetch: int = 0, adc_dtype: str = "f32",
                      rerank: Optional[int] = None,
                      pipeline: Optional[bool] = None,
-                     gap: Optional[Union[int, str]] = None):
+                     gap: Optional[Union[int, str]] = None,
+                     entry: str = "auto"):
         """Batched vectorized beam search over all queries at once, with
         optional two-hop pipelining (``pipeline``, default on whenever
-        ``prefetch > 0``) and readahead-gap control (``gap``, including
-        ``"auto"``).  Full knob documentation: ``core.traversal
-        .search_batch``.  Returns (ids (nq, k) in ORIGINAL labels,
-        [SearchStats])."""
+        ``prefetch > 0``), readahead-gap control (``gap``, including
+        ``"auto"``), and entry seeding (``entry="nav"|"medoid"|"auto"``:
+        per-query entry vertices from the in-RAM navigation tier vs the
+        fixed medoid — "auto" uses nav iff the index carries the tier).
+        Full knob documentation: ``core.traversal.search_batch``.
+        Returns (ids (nq, k) in ORIGINAL labels, [SearchStats])."""
         ids, stats = _traversal.search_batch(self, Q, k, L, w,
                                              prefetch=prefetch,
                                              adc_dtype=adc_dtype,
                                              rerank=rerank,
-                                             pipeline=pipeline, gap=gap)
+                                             pipeline=pipeline, gap=gap,
+                                             entry=entry)
         return self._map_out(ids), stats

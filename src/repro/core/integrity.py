@@ -34,7 +34,12 @@ import numpy as np
 #:   2 — adds the block_crc.npy checksum sidecar, ``format_version`` and
 #:       ``crc_algo`` meta keys.  v1 dirs still load, with verification
 #:       off (there is nothing to verify against).
-FORMAT_VERSION = 2
+#:   3 — adds the OPTIONAL nav_graph.npz navigation-tier sidecar and the
+#:       ``nav`` meta key (pivot-selection params).  v1/v2 dirs still
+#:       load, with the nav tier disabled; a v3 dir whose sidecar is
+#:       damaged also loads nav-disabled (with a warning) — only core
+#:       index damage raises CorruptIndexError.
+FORMAT_VERSION = 3
 
 #: sidecar filename: one uint32 checksum per ``io_bytes`` unit of
 #: chunks.bin, in file order.

@@ -62,6 +62,7 @@ from typing import Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from repro.obs import trace as obs_trace
+from repro.core import nav as _nav
 from repro.core.adc import (np_adc, np_adc_int8, np_build_lut,
                             np_build_lut_batch, np_host_lut_int8)
 from repro.core.chunk_layout import B_NUM, parse_chunk
@@ -103,6 +104,22 @@ class SearchStats:
     # failures and the engine fell back to the serial demand path for
     # the remainder of this search
     degraded: int = 0
+    # entry seeding: entry_dist is the best seed's ADC distance (how deep
+    # the seeding dropped this query into the graph); with entry="nav",
+    # nav_hops/nav_dists count the in-RAM pivot beam's hops and ADC
+    # evaluations (zero storage I/O) and nav_s is the beam's wall time
+    # (whole-batch total on the lead query, like syscall attribution)
+    entry_dist: float = 0.0
+    nav_hops: int = 0
+    nav_dists: int = 0
+    nav_s: float = 0.0
+    # the hop (1-based) at which the LAST member of the returned top-k
+    # entered the search: expansion hop for the traversal-pool tier,
+    # candidate-insertion hop for the rerank/PQ tiers; 0 when the result
+    # came entirely from the entry seeds.  hops - convergence_hop is the
+    # verification tail (bounded by ~L/w): entry seeding shrinks the
+    # TRAVEL phase, which this metric isolates.
+    convergence_hop: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -111,12 +128,17 @@ class SearchStats:
 
 
 def search_ref(host, q: np.ndarray, k: int, L: int, w: int = 4, *,
-               adc_dtype: str = "f32", rerank: Optional[int] = None
+               adc_dtype: str = "f32", rerank: Optional[int] = None,
+               entry: str = "auto"
                ) -> Tuple[np.ndarray, SearchStats]:
     """Scalar DiskANN beam search, one pread per node expansion.  Kept as
     the semantics oracle for the vectorized hot path — `search_batch` must
     return bit-identical ids (per adc_dtype: the int8 oracle pins the int8
-    hot path).  Returns STORAGE-space ids."""
+    hot path; per entry mode: the nav-seeded oracle pins the nav-seeded
+    hot path).  ``entry`` selects the seeding (see `search_batch`); nav
+    seeds come from the SAME `core.nav.nav_seed_batch` call the batched
+    path makes (batch of one), so seed ids AND seed ADC distances are
+    bit-identical by construction.  Returns STORAGE-space ids."""
     assert adc_dtype in ("f32", "int8"), adc_dtype
     t0 = time.perf_counter()
     q = np.asarray(q, dtype=np.float32)   # same arithmetic as `search`
@@ -130,12 +152,33 @@ def search_ref(host, q: np.ndarray, k: int, L: int, w: int = 4, *,
         adc = lambda codes: np_adc_int8(lut_q8, scale, codes)  # noqa: E731
     else:
         adc = lambda codes: np_adc(lut, codes)                 # noqa: E731
-    eps = np.asarray(host.meta["entry_points"], dtype=np.int64)
-    # candidate list: ids, pq-dists, expanded?
-    cand_ids = eps.copy()
-    cand_d = adc(host.ep_codes)                          # entry codes: RAM
-    stats.pq_dists += len(eps)
+    entry_mode = _nav.resolve_entry(host, entry)
+    if entry_mode == "nav":
+        t_nav = time.perf_counter()
+        if adc_dtype == "int8":
+            sid, sd, nh, nd = _nav.nav_seed_batch(
+                host.nav, lut_q8[None],
+                (scale * np.float32(1 / 127))[None], w)
+        else:
+            sid, sd, nh, nd = _nav.nav_seed_batch(host.nav, lut[None],
+                                                  None, w)
+        stats.nav_s = time.perf_counter() - t_nav
+        stats.nav_hops = int(nh[0])
+        stats.nav_dists = int(nd[0])
+        svalid = sid[0] >= 0
+        eps = sid[0][svalid]
+        cand_ids = eps.copy()
+        cand_d = sd[0][svalid]
+    else:
+        eps = np.asarray(host.meta["entry_points"], dtype=np.int64)
+        # candidate list: ids, pq-dists, expanded?
+        cand_ids = eps.copy()
+        cand_d = adc(host.ep_codes)                      # entry codes: RAM
+        stats.pq_dists += len(eps)
+    stats.entry_dist = float(cand_d.min()) if cand_d.size else 0.0
     expanded: Dict[int, float] = {}                      # id -> exact dist
+    exp_hop: Dict[int, int] = {}                         # id -> hop expanded
+    ins_hop = {int(e): 0 for e in eps}                   # id -> hop inserted
     inserted = set(int(e) for e in eps)
     while True:
         order = np.argsort(cand_d, kind="stable")[:L]
@@ -155,6 +198,7 @@ def search_ref(host, q: np.ndarray, k: int, L: int, w: int = 4, *,
                 expanded[p] = float(-(vf @ q))
             else:
                 expanded[p] = float(((vf - q) ** 2).sum())
+            exp_hop[p] = stats.hops
             # clamp to the n snapshot exactly like the -1 padding: under a
             # concurrent insert a patched chunk may surface an edge to a
             # node past this search's view of the index — following it
@@ -175,6 +219,8 @@ def search_ref(host, q: np.ndarray, k: int, L: int, w: int = 4, *,
             d = adc(codes)
             stats.pq_dists += int(fresh.size)
             inserted.update(int(f) for f in fresh)
+            for f in fresh:
+                ins_hop[int(f)] = stats.hops
             new_ids.append(fresh)
             new_d.append(d)
         if new_ids:
@@ -185,9 +231,13 @@ def search_ref(host, q: np.ndarray, k: int, L: int, w: int = 4, *,
         vids = np.array(list(expanded.keys()), dtype=np.int64)
         vd = np.array(list(expanded.values()), dtype=np.float32)
         topk = vids[np.argsort(vd, kind="stable")[:k]]
+        if topk.size:
+            stats.convergence_hop = max(exp_hop[int(t)] for t in topk)
     else:
         topk = _rerank_tail_ref(host, q, k, rerank, cand_ids, expanded,
                                 stats)
+        if topk.size:
+            stats.convergence_hop = max(ins_hop[int(t)] for t in topk)
     stats.latency_s = time.perf_counter() - t0
     return topk, stats
 
@@ -219,14 +269,15 @@ def _rerank_tail_ref(host, q: np.ndarray, k: int, rerank: int,
 
 
 def search_batch_ref(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
-                     adc_dtype: str = "f32", rerank: Optional[int] = None):
+                     adc_dtype: str = "f32", rerank: Optional[int] = None,
+                     entry: str = "auto"):
     """Scalar reference loop (the seed implementation's search_batch).
     Returns STORAGE-space ids."""
     ids = np.zeros((Q.shape[0], k), dtype=np.int64)
     stats = []
     for i in range(Q.shape[0]):
         ids[i], s = search_ref(host, Q[i], k, L, w, adc_dtype=adc_dtype,
-                               rerank=rerank)
+                               rerank=rerank, entry=entry)
         stats.append(s)
     return ids, stats
 
@@ -240,7 +291,8 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
                  prefetch: int = 0, adc_dtype: str = "f32",
                  rerank: Optional[int] = None,
                  pipeline: Optional[bool] = None,
-                 gap: Optional[Union[int, str]] = None):
+                 gap: Optional[Union[int, str]] = None,
+                 entry: str = "auto"):
     """Batched vectorized beam search over all queries at once.
 
     All queries hop together (per-hop frontier interleaving): each hop
@@ -265,6 +317,20 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
     ``adc_dtype="int8"`` runs neighbor ADC through the quantized host
     path (np_host_lut_int8 / np_adc_int8 — the numpy twin of the device
     int8 kernel); exact re-rank distances stay f32.
+
+    ``entry`` selects how the on-disk search is seeded:
+      * "medoid" — the fixed pack-time ``meta["entry_points"]`` (the
+        historical behavior; always available),
+      * "nav" — per-query entry vertices from the in-RAM navigation
+        tier (``core.nav``): a vectorized beam over the pivot graph,
+        pure ADC against RAM-resident pivot codes, zero storage I/O,
+        replaces the fixed seed with the w best pivots for THIS query —
+        fewer on-disk hops, not just faster ones.  Raises ValueError if
+        the index carries no (loadable) tier,
+      * "auto" (default) — "nav" iff the index carries the tier.
+    The nav beam's ADC runs in the selected ``adc_dtype`` regime, and
+    the scalar oracle consumes the identical `nav_seed_batch` output, so
+    bit-identity to `search_ref` holds in every entry mode.
 
     ``rerank`` selects the result tier, bit-identical to `search_ref`:
       * None (default) — top-k by the exact distances of nodes expanded
@@ -319,8 +385,19 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
     pf_fail_hops = 0
     degraded = False
     was_pipelined = pipeline            # report the mode the search BEGAN in
-    eps = np.asarray(host.meta["entry_points"], dtype=np.int64)
-    n_ep = len(eps)
+    entry_mode = _nav.resolve_entry(host, entry)
+    nav_s = 0.0
+    nav_hops_a = nav_dists_a = None
+    seed_ids = seed_d = None
+    if entry_mode == "nav":
+        # the in-RAM nav beam (zero storage I/O): per-query entry
+        # vertices + their ADC distances in the current adc_dtype regime.
+        # The scalar oracle consumes this SAME function's output, so the
+        # on-disk search below starts from bit-identical state.
+        t_nav = time.perf_counter()
+        seed_ids, seed_d, nav_hops_a, nav_dists_a = \
+            _nav.nav_seed_batch(host.nav, lut_g, dq, w)
+        nav_s = time.perf_counter() - t_nav
     # per-query counters (numpy-resident; folded into SearchStats at end)
     hops_a = np.zeros(nq, np.int64)
     ios_a = np.zeros(nq, np.int64)
@@ -331,26 +408,54 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
     miss_a = np.zeros(nq, np.int64)
     rr_a = np.zeros(nq, np.int64)
     # candidate lists (sorted by PQ distance, stable; inf-padded to L)
-    width = max(L, n_ep)
-    cand_ids = np.full((nq, width), -1, np.int64)
-    cand_d = np.full((nq, width), np.inf, np.float32)
-    cand_exp = np.ones((nq, width), bool)
-    cand_ids[:, :n_ep] = eps
-    ep_g = lut_g[:, jj, host.ep_codes.astype(np.int64)]   # (nq, n_ep, m)
-    cand_d[:, :n_ep] = (ep_g.astype(np.float32)
-                        * dq[:, None, :]).sum(-1) \
-        if dq is not None else ep_g.sum(-1)
-    cand_exp[:, :n_ep] = False
-    pq_a += n_ep
+    bits = np.zeros((nq, -(-n // 64)), np.uint64)  # visited uint64 bitset
+    if entry_mode == "nav":
+        # per-QUERY seeds: each query gets its own entry vertices and
+        # their already-computed beam distances (-1 / inf padding rows
+        # start expanded so they are never selected)
+        n_ep = seed_ids.shape[1]
+        width = max(L, n_ep)
+        cand_ids = np.full((nq, width), -1, np.int64)
+        cand_d = np.full((nq, width), np.inf, np.float32)
+        cand_exp = np.ones((nq, width), bool)
+        svalid = seed_ids >= 0
+        cand_ids[:, :n_ep] = seed_ids
+        cand_d[:, :n_ep] = seed_d
+        cand_exp[:, :n_ep] = ~svalid
+        rows, vcols = np.nonzero(svalid)
+        sid_v = seed_ids[rows, vcols]
+        np.bitwise_or.at(bits, (rows, sid_v >> 6),
+                         np.uint64(1) << (sid_v & 63).astype(np.uint64))
+    else:
+        # fixed pack-time seeds, SHARED by every query in the batch
+        eps = np.asarray(host.meta["entry_points"], dtype=np.int64)
+        n_ep = len(eps)
+        width = max(L, n_ep)
+        cand_ids = np.full((nq, width), -1, np.int64)
+        cand_d = np.full((nq, width), np.inf, np.float32)
+        cand_exp = np.ones((nq, width), bool)
+        cand_ids[:, :n_ep] = eps
+        ep_g = lut_g[:, jj, host.ep_codes.astype(np.int64)]  # (nq,n_ep,m)
+        cand_d[:, :n_ep] = (ep_g.astype(np.float32)
+                            * dq[:, None, :]).sum(-1) \
+            if dq is not None else ep_g.sum(-1)
+        cand_exp[:, :n_ep] = False
+        pq_a += n_ep
+        np.bitwise_or.at(
+            bits, (np.repeat(np.arange(nq), n_ep), np.tile(eps >> 6, nq)),
+            np.tile(np.uint64(1) << (eps & 63).astype(np.uint64), nq))
+    # candidate-insertion hop (1-based; seeds are hop 0) — feeds
+    # convergence_hop for the rerank/PQ result tiers
+    cand_hop = np.zeros((nq, width), np.int32)
     order = np.argsort(cand_d, axis=1, kind="stable")[:, :L]
     cand_ids = np.take_along_axis(cand_ids, order, 1)
     cand_d = np.take_along_axis(cand_d, order, 1)
     cand_exp = np.take_along_axis(cand_exp, order, 1)
-    # visited set: packed uint64 bitset, one row per query
-    bits = np.zeros((nq, -(-n // 64)), np.uint64)
-    np.bitwise_or.at(
-        bits, (np.repeat(np.arange(nq), n_ep), np.tile(eps >> 6, nq)),
-        np.tile(np.uint64(1) << (eps & 63).astype(np.uint64), nq))
+    cand_hop = np.take_along_axis(cand_hop, order, 1)
+    entry_d0 = cand_d[:, 0].copy()     # best seed per query (entry_dist)
+    conv_a = np.zeros(nq, np.int64)
+    hop_no = 0                         # global loop iteration (1-based in
+    #                                    use; per-query prefix == its hops)
     pool_ids_cols: List[np.ndarray] = []
     pool_d_cols: List[np.ndarray] = []
 
@@ -383,6 +488,7 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
         qf, cols = np.nonzero(fmask)       # row-major: grouped by query
         cand_exp |= fmask
         nf = cand_ids[qf, cols]
+        hop_no += 1
         np.add.at(hops_a, np.unique(qf), 1)
         np.add.at(ios_a, qf, 1)
         # 1b. PIPELINE: the predicted hop-(t+1) frontier — the next best
@@ -477,10 +583,13 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
             all_d = np.concatenate([cand_d, new_d], axis=1)
             all_exp = np.concatenate(
                 [cand_exp, ~np.isfinite(new_d)], axis=1)
+            all_hop = np.concatenate(
+                [cand_hop, np.full((nq, K), hop_no, np.int32)], axis=1)
             order = np.argsort(all_d, axis=1, kind="stable")[:, :L]
             cand_ids = np.take_along_axis(all_ids, order, 1)
             cand_d = np.take_along_axis(all_d, order, 1)
             cand_exp = np.take_along_axis(all_exp, order, 1)
+            cand_hop = np.take_along_axis(all_hop, order, 1)
         # 6. async next-hop prefetch: the candidate list the NEXT hop
         # will select its frontier from is final here, so the top
         # `prefetch` unexpanded candidates per query are its exact
@@ -541,12 +650,14 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
                                       pool_d[i][vmask].tolist()))
         sel_ids: List[np.ndarray] = []
         sel_d: List[Optional[np.ndarray]] = []
+        sel_hops: List[np.ndarray] = []
         need_pairs: List[Tuple[int, int]] = []
         need_nodes: List[int] = []
         for i in range(nq):
             vmask = (cand_ids[i] >= 0) & np.isfinite(cand_d[i])
             sel = cand_ids[i][vmask][:max(r_eff, k)]
             sel_ids.append(sel)
+            sel_hops.append(cand_hop[i][vmask][:max(r_eff, k)])
             if not r_eff:            # PQ-only tier: keep ADC ranking
                 sel_d.append(None)
                 continue
@@ -601,11 +712,13 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
                 sel_d[i][j] = e
         for i in range(nq):
             if r_eff:
-                top = sel_ids[i][
-                    np.argsort(sel_d[i], kind="stable")[:k]]
+                oi = np.argsort(sel_d[i], kind="stable")[:k]
             else:
-                top = sel_ids[i][:k]
+                oi = np.arange(min(k, sel_ids[i].size))
+            top = sel_ids[i][oi]
             out[i, :top.size] = top
+            if top.size:
+                conv_a[i] = int(sel_hops[i][oi].max())
     elif pool_ids_cols:
         # re-rank over every expanded node, in expansion order
         # (stable ties) — the traversal-pool tier
@@ -614,8 +727,14 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
         for i in range(nq):
             vmask = pool_ids[i] >= 0
             vids, vd = pool_ids[i][vmask], pool_d[i][vmask]
-            top = vids[np.argsort(vd, kind="stable")[:k]]
+            oi = np.argsort(vd, kind="stable")[:k]
+            top = vids[oi]
             out[i, :top.size] = top
+            if top.size:
+                # pool column c was appended on loop iteration c // w,
+                # and a query's active iterations are exactly its first
+                # `hops` — so this matches the oracle's expansion hop
+                conv_a[i] = int(np.flatnonzero(vmask)[oi].max() // w) + 1
     wall = time.perf_counter() - t0
     stats = []
     for i in range(nq):
@@ -624,7 +743,12 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
             bytes_read=int(bytes_a[i]), pq_dists=int(pq_a[i]),
             latency_s=wall / nq, syscalls=int(sys_a[i]),
             cache_hits=int(hit_a[i]), cache_misses=int(miss_a[i]),
-            rerank_ios=int(rr_a[i])))
+            rerank_ios=int(rr_a[i]),
+            convergence_hop=int(conv_a[i]),
+            entry_dist=float(entry_d0[i]),
+            nav_hops=int(nav_hops_a[i]) if nav_hops_a is not None else 0,
+            nav_dists=int(nav_dists_a[i])
+            if nav_dists_a is not None else 0))
     if pf0 is not None:
         # whole-batch prefetch deltas, attributed to the lead query
         c = cache.counters
@@ -636,6 +760,7 @@ def search_batch(host, Q: np.ndarray, k: int, L: int, w: int = 4, *,
     stats[0].compute_s = compute_s
     stats[0].pipelined = int(was_pipelined)
     stats[0].degraded = int(degraded)
+    stats[0].nav_s = nav_s
     # SearchStats -> histograms: a pool-attached handle publishes hop /
     # I/O / blocked-vs-compute DISTRIBUTIONS per corpus (obs.metrics
     # SearchMetrics); bare HostIndex loads skip this with one getattr

@@ -335,7 +335,8 @@ class SearchMetrics:
     `core.traversal` feeds it when present, and skips a single attribute
     check when not."""
 
-    __slots__ = ("latency", "hops", "ios", "blocked", "compute")
+    __slots__ = ("latency", "hops", "conv_hops", "nav_hops", "ios",
+                 "blocked", "compute")
 
     def __init__(self, registry: MetricsRegistry, corpus: str):
         lbl = {"corpus": corpus}
@@ -343,8 +344,15 @@ class SearchMetrics:
             "search_batch_latency_seconds", lbl,
             help="wall time of one search_batch call", unit="seconds")
         self.hops = registry.histogram(
-            "search_hops", lbl, buckets=COUNT_BUCKETS,
-            help="beam-traversal hops per query")
+            "traversal_hops", lbl, buckets=COUNT_BUCKETS,
+            help="on-disk beam-traversal hops per query")
+        self.conv_hops = registry.histogram(
+            "traversal_convergence_hops", lbl, buckets=COUNT_BUCKETS,
+            help="hops until the returned top-k stopped changing")
+        self.nav_hops = registry.histogram(
+            "nav_beam_hops", lbl, buckets=COUNT_BUCKETS,
+            help="in-RAM navigation-tier beam hops per query "
+                 "(only observed when the nav tier seeded the search)")
         self.ios = registry.histogram(
             "search_ios", lbl, buckets=COUNT_BUCKETS,
             help="I/O requests per query")
@@ -360,6 +368,9 @@ class SearchMetrics:
                       blocked_s: float, compute_s: float):
         for s in stats:
             self.hops.observe(s.hops)
+            self.conv_hops.observe(s.convergence_hop)
+            if s.nav_dists > 0:
+                self.nav_hops.observe(s.nav_hops)
             self.ios.observe(s.ios)
         self.latency.observe(wall_s)
         self.blocked.observe(blocked_s)

@@ -66,6 +66,7 @@ class WorkerSpec:
     prefetch: int = 0
     pipeline: Optional[bool] = None
     gap: Optional[object] = None
+    entry: str = "auto"                # nav-tier entry seeding (docs/navigation.md)
     drain_s: float = 2.0               # SIGTERM queue-drain budget
     default_deadline_s: float = 30.0   # requests that carry no deadline
     # observability knobs (see docs/observability.md)
@@ -133,12 +134,14 @@ def serve_worker(spec: WorkerSpec):          # pragma: no cover — subprocess
         max_wait_ms=spec.max_wait_ms, max_queue_depth=spec.max_queue_depth,
         L=spec.L, w=spec.w, rerank=spec.rerank, adc_dtype=spec.adc_dtype,
         prefetch=spec.prefetch, pipeline=spec.pipeline, gap=spec.gap,
+        entry=spec.entry,
         # exact distances ride along with every answer: the router's
         # cross-shard merge needs comparable scores
         search_fn=lambda idx, q, k: make_host_search_dist_fn(
             idx, L=spec.L, w=spec.w, prefetch=spec.prefetch,
             adc_dtype=spec.adc_dtype, rerank=spec.rerank,
-            pipeline=spec.pipeline, gap=spec.gap)(q, k))
+            pipeline=spec.pipeline, gap=spec.gap,
+            entry=spec.entry)(q, k))
 
     def handle_search(conn, header, blob):
         req_id = int(header.get("req_id", -1))

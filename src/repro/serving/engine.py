@@ -90,7 +90,7 @@ def make_host_search_fn(host_index, *, L: int = 48, w: int = 4,
                         prefetch: int = 0, adc_dtype: str = "f32",
                         rerank: Optional[int] = None,
                         pipeline: Optional[bool] = None,
-                        gap=None):
+                        gap=None, entry: str = "auto"):
     """Wrap `HostIndex.search_batch` (the vectorized storage-backed path)
     into the `(queries, k) -> ids` callable `ServingEngine` consumes.
     `prefetch` enables speculative next-hop block reads off the demand
@@ -101,13 +101,16 @@ def make_host_search_fn(host_index, *, L: int = 48, w: int = 4,
     `adc_dtype="int8"` serves via the quantized host ADC twin;
     `rerank` selects the result tier (None = traversal pool, 0 = PQ-only,
     r > 0 = exact rerank of the top-r candidates — the beam width is
-    widened to r so the full depth exists, matching the device tier)."""
+    widened to r so the full depth exists, matching the device tier);
+    `entry` selects the seeding ("auto" = per-query nav entry vertices
+    iff the index carries a navigation tier, see `core.nav`)."""
     def search(queries: np.ndarray, k: int) -> np.ndarray:
         ids, _ = host_index.search_batch(queries, k,
                                          L=max(L, k, rerank or 0), w=w,
                                          prefetch=prefetch,
                                          adc_dtype=adc_dtype, rerank=rerank,
-                                         pipeline=pipeline, gap=gap)
+                                         pipeline=pipeline, gap=gap,
+                                         entry=entry)
         return ids
 
     return search
@@ -157,14 +160,14 @@ def make_host_search_dist_fn(host_index, *, L: int = 48, w: int = 4,
                              prefetch: int = 0, adc_dtype: str = "f32",
                              rerank: Optional[int] = None,
                              pipeline: Optional[bool] = None,
-                             gap=None):
+                             gap=None, entry: str = "auto"):
     """`(queries, k) -> (ids, dists)` twin of `make_host_search_fn`: the
     same search plus exact distances for the cross-shard merge.  This is
     the search callable cluster shard workers install on their
     `RetrievalService` (whose `_serve` accepts tuple returns)."""
     base = make_host_search_fn(host_index, L=L, w=w, prefetch=prefetch,
                                adc_dtype=adc_dtype, rerank=rerank,
-                               pipeline=pipeline, gap=gap)
+                               pipeline=pipeline, gap=gap, entry=entry)
 
     def search(queries: np.ndarray, k: int):
         ids = base(queries, k)

@@ -610,10 +610,16 @@ class WarmIndexPool:
             used = cent_bytes
             caches = {}
             pinned = {}
+            nav_bytes = {}
             for n, e in entries:
                 used += self._entry_bytes(e)
                 if e.pins:
                     pinned[n] = e.pins
+                # navigation-tier residency is part of resident_bytes and
+                # hence of `used`; broken out so operators can see what
+                # the pivot graph costs against the budget
+                if getattr(e.index, "nav", None) is not None:
+                    nav_bytes[n] = int(e.index.nav.resident_nbytes())
                 cache = e.index.cache
                 if cache is None:
                     continue
@@ -658,6 +664,7 @@ class WarmIndexPool:
                          ("pool_evictions", self.evictions),
                          ("pool_swaps", self.swaps),
                          ("pool_used_bytes", used),
+                         ("pool_nav_bytes", sum(nav_bytes.values())),
                          ("pool_retired", len(self._retired))):
                 self.registry.gauge(g).set(v)
             return dict(
@@ -675,6 +682,8 @@ class WarmIndexPool:
                 budget_bytes=self.budget_bytes,
                 max_open=self.max_open,
                 centroid_bytes=cent_bytes,
+                nav_bytes=nav_bytes,
+                nav_bytes_total=int(sum(nav_bytes.values())),
                 pinned=pinned,
                 caches=caches,
                 health={n: dict(state=h.state,

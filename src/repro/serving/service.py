@@ -108,7 +108,7 @@ class RetrievalService:
                  max_queue_depth: int = 256, L: int = 48, w: int = 4,
                  rerank: Optional[int] = None, adc_dtype: str = "f32",
                  prefetch: int = 0, pipeline: Optional[bool] = None,
-                 gap=None,
+                 gap=None, entry: str = "auto",
                  search_fn: Optional[Callable] = None,
                  registry: Optional[MetricsRegistry] = None):
         self.pool = pool
@@ -128,6 +128,10 @@ class RetrievalService:
         # prefetch depth, "auto" tunes it from the miss histogram
         self.pipeline = pipeline
         self.gap = gap
+        # entry="auto": per-query nav entry vertices whenever the served
+        # index carries a navigation tier, fixed medoid otherwise —
+        # mixed pools (nav and nav-less corpora) serve correctly
+        self.entry = entry
         self._search_fn = search_fn or self._default_search
         self._cond = threading.Condition()
         self._queues: Dict[str, deque] = {}
@@ -153,7 +157,8 @@ class RetrievalService:
         return make_host_search_fn(
             index, L=self.L, w=self.w, prefetch=self.prefetch,
             adc_dtype=self.adc_dtype, rerank=self.rerank,
-            pipeline=self.pipeline, gap=self.gap)(queries, k)
+            pipeline=self.pipeline, gap=self.gap,
+            entry=self.entry)(queries, k)
 
     def submit(self, query: np.ndarray, corpus: str = "default", k: int = 10,
                deadline_s: Optional[float] = None,
@@ -375,6 +380,14 @@ class RetrievalService:
                     span = max(tel.last_done - tel.first_submit, 1e-9)
                 tel.queue_depth.set(len(self._queues.get(c, ())))
                 lat = tel.latency
+                # the pool's per-handle SearchMetrics feeds these series
+                # into the same registry; the idempotent getter returns
+                # the live series (or an empty one, skipped below)
+                hops = self.registry.histogram(
+                    "traversal_hops", {"corpus": c}, buckets=COUNT_BUCKETS)
+                conv = self.registry.histogram(
+                    "traversal_convergence_hops", {"corpus": c},
+                    buckets=COUNT_BUCKETS)
                 corpora[c] = dict(
                     completed=completed,
                     rejected=int(tel.rejected.value),
@@ -390,7 +403,13 @@ class RetrievalService:
                     **({"p50_ms": lat.quantile(0.50) * 1e3,
                         "p95_ms": lat.quantile(0.95) * 1e3,
                         "p99_ms": lat.quantile(0.99) * 1e3}
-                       if lat.count else {}))
+                       if lat.count else {}),
+                    **({"hops_p50": hops.quantile(0.50),
+                        "hops_p95": hops.quantile(0.95),
+                        "hops_p99": hops.quantile(0.99)}
+                       if hops.count else {}),
+                    **({"convergence_hops_p50": conv.quantile(0.50)}
+                       if conv.count else {}))
             tels = list(self._tel.values())
             p50 = merged_quantile([t.latency for t in tels], 0.50)
             p99 = merged_quantile([t.latency for t in tels], 0.99)

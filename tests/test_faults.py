@@ -180,10 +180,10 @@ def test_on_disk_bitrot_detected(faulty_fixture, tmp_path):
 # ---------------------------------------------------------------------------
 
 
-def test_checksummed_format_v2(faulty_fixture):
+def test_checksummed_format_v3(faulty_fixture):
     p, _, _, _, io_bytes = faulty_fixture
     meta = json.load(open(os.path.join(p, "meta.json")))
-    assert meta["format_version"] == FORMAT_VERSION == 2
+    assert meta["format_version"] == FORMAT_VERSION == 3
     assert meta["crc_algo"] in ("crc32", "crc32c")
     crc = np.load(os.path.join(p, CRC_SIDECAR))
     payload = np.fromfile(os.path.join(p, "chunks.bin"), np.uint8)

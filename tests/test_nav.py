@@ -1,0 +1,332 @@
+"""Navigation tier (PR 10): pivot selection, the in-RAM nav beam, the
+``entry=`` knob, sidecar compatibility/corruption handling, and budget
+accounting.
+
+Invariants under test:
+
+  * nav-seeded batched search is bit-identical to the nav-seeded scalar
+    Algorithm-1 oracle across {adc_dtype} x {prefetch, pipeline} x
+    {relabel} (the same discipline every prior traversal knob obeys),
+  * pivot selection is seed-stable (same inputs -> same pivots),
+  * dirs without the sidecar (v1/v2 format) load and serve with the
+    tier DISABLED; a corrupt/truncated/missing sidecar degrades the
+    same way with a RuntimeWarning — ``CorruptIndexError`` stays
+    reserved for core-index damage (docs/failure_model.md),
+  * nav residency is charged into ``resident_bytes`` and hence the
+    ``WarmIndexPool`` budget, and surfaces in ``pool.stats()``.
+"""
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import nav as navmod
+from repro.core.index_io import HostIndex, write_index
+from repro.core.traversal import recall_at
+
+
+@pytest.fixture(scope="module")
+def nav_dirs(tmp_path_factory, small_corpus, built_graph, pq_artifacts):
+    """{relabel: path} nav-enabled indices + a nav-less twin."""
+    base, _, _ = small_corpus
+    cents, codes = pq_artifacts
+    root = tmp_path_factory.mktemp("nav_idx")
+    paths = {}
+    for relabel in (False, True):
+        p = str(root / f"nav_rl{int(relabel)}")
+        write_index(p, vectors=base, graph=built_graph, centroids=cents,
+                    codes=codes, metric="l2", mode="aisaq",
+                    relabel=relabel, nav=True, nav_fraction=0.03)
+        paths[relabel] = p
+    p = str(root / "plain")
+    write_index(p, vectors=base, graph=built_graph, centroids=cents,
+                codes=codes, metric="l2", mode="aisaq")
+    paths["plain"] = p
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# pivot selection
+# ---------------------------------------------------------------------------
+
+
+def test_select_pivots_seed_stable(small_corpus):
+    base, _, _ = small_corpus
+    a = navmod.select_pivots(base, fraction=0.03, seed=7)
+    b = navmod.select_pivots(base, fraction=0.03, seed=7)
+    np.testing.assert_array_equal(a, b)
+    c = navmod.select_pivots(base, fraction=0.03, seed=8)
+    assert not np.array_equal(a, c)
+    # sorted unique valid ids, ~fraction * n of them
+    assert a.dtype == np.int64 and (np.diff(a) > 0).all()
+    assert 0 <= a.min() and a.max() < len(base)
+    assert a.size == max(1, round(0.03 * len(base)))
+    r = navmod.select_pivots(base, fraction=0.03, seed=7, method="random")
+    assert r.size == a.size and (np.diff(r) > 0).all()
+    with pytest.raises(ValueError, match="method"):
+        navmod.select_pivots(base, method="bogus")
+
+
+def test_build_nav_deterministic(small_corpus, pq_artifacts):
+    base, _, _ = small_corpus
+    _, codes = pq_artifacts
+    a = navmod.build_nav(base, codes, fraction=0.03, seed=3)
+    b = navmod.build_nav(base, codes, fraction=0.03, seed=3)
+    np.testing.assert_array_equal(a.pivot_ids, b.pivot_ids)
+    np.testing.assert_array_equal(a.graph, b.graph)
+    np.testing.assert_array_equal(a.codes, b.codes)
+    assert a.params == b.params
+    assert a.resident_nbytes() > 0
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: nav-seeded batch == nav-seeded scalar oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("relabel", [False, True])
+def test_nav_parity_grid(nav_dirs, small_corpus, relabel):
+    base, q, gt = small_corpus
+    idx = HostIndex.load(nav_dirs[relabel])
+    assert idx.nav is not None
+    try:
+        for entry in ("nav", "medoid", "auto"):
+            for adc in ("f32", "int8"):
+                ref_ids, ref_st = idx.search_batch_ref(
+                    q, 10, L=32, w=4, adc_dtype=adc, entry=entry)
+                for pf, pl in ((0, False), (4, False), (4, True)):
+                    idx.cache.wait_prefetch()
+                    idx.cache.clear()
+                    ids, st = idx.search_batch(
+                        q, 10, L=32, w=4, prefetch=pf, adc_dtype=adc,
+                        pipeline=pl, entry=entry)
+                    tag = f"entry={entry} adc={adc} pf={pf} pl={pl}"
+                    assert np.array_equal(ids, ref_ids), tag
+                    # hop accounting matches the oracle per query
+                    assert [s.hops for s in st] \
+                        == [s.hops for s in ref_st], tag
+                    assert [s.convergence_hop for s in st] \
+                        == [s.convergence_hop for s in ref_st], tag
+                assert recall_at(ids, gt, 10) > 0.6
+    finally:
+        idx.close()
+
+
+def test_nav_rerank_parity(nav_dirs, small_corpus):
+    base, q, _ = small_corpus
+    idx = HostIndex.load(nav_dirs[True])
+    try:
+        ref_ids, _ = idx.search_batch_ref(q, 10, L=32, w=4, rerank=20,
+                                          entry="nav")
+        ids, _ = idx.search_batch(q, 10, L=32, w=4, rerank=20, entry="nav")
+        np.testing.assert_array_equal(ids, ref_ids)
+    finally:
+        idx.close()
+
+
+def test_nav_seed_batch_row_independent(nav_dirs, small_corpus,
+                                        pq_artifacts):
+    """A batch of one computes bit-identical rows to the full batch —
+    the property the scalar-oracle guarantee rests on."""
+    from repro.core.adc import np_build_lut_batch
+    base, q, _ = small_corpus
+    cents, _ = pq_artifacts
+    idx = HostIndex.load(nav_dirs[False])
+    try:
+        lut = np_build_lut_batch(idx.centroids, q, "l2")
+        ids_b, d_b, hops_b, evals_b = navmod.nav_seed_batch(
+            idx.nav, lut, None, 4)
+        for i in range(len(q)):
+            ids_1, d_1, hops_1, evals_1 = navmod.nav_seed_batch(
+                idx.nav, lut[i:i + 1], None, 4)
+            np.testing.assert_array_equal(ids_1[0], ids_b[i])
+            np.testing.assert_array_equal(d_1[0], d_b[i])
+            assert hops_1[0] == hops_b[i] and evals_1[0] == evals_b[i]
+        # seeds are storage-space ids drawn from the pivot set
+        valid = ids_b[ids_b >= 0]
+        assert np.isin(valid, idx.nav.pivot_ids).all()
+    finally:
+        idx.close()
+
+
+def test_nav_stats_fields(nav_dirs, small_corpus):
+    base, q, _ = small_corpus
+    idx = HostIndex.load(nav_dirs[False])
+    try:
+        _, st_nav = idx.search_batch(q, 10, L=32, w=4, entry="nav")
+        _, st_med = idx.search_batch(q, 10, L=32, w=4, entry="medoid")
+        assert all(s.nav_dists > 0 and s.nav_hops >= 0 for s in st_nav)
+        assert all(s.nav_dists == 0 and s.nav_hops == 0 for s in st_med)
+        assert all(0 < s.convergence_hop <= s.hops for s in st_nav)
+        assert all(np.isfinite(s.entry_dist) for s in st_nav)
+        # nav beam cost is accounted but does ZERO storage I/O: medoid
+        # and nav runs read from the same cache state
+        assert st_nav[0].nav_s >= 0.0
+    finally:
+        idx.close()
+
+
+# ---------------------------------------------------------------------------
+# entry= knob semantics
+# ---------------------------------------------------------------------------
+
+
+def test_entry_auto_and_errors(nav_dirs, small_corpus):
+    base, q, _ = small_corpus
+    idx = HostIndex.load(nav_dirs[False])
+    plain = HostIndex.load(nav_dirs["plain"])
+    try:
+        ids_auto, _ = idx.search_batch(q, 10, L=32, w=4, entry="auto")
+        ids_nav, _ = idx.search_batch(q, 10, L=32, w=4, entry="nav")
+        np.testing.assert_array_equal(ids_auto, ids_nav)  # auto -> nav
+        assert plain.nav is None
+        ids_p, _ = plain.search_batch(q, 10, L=32, w=4, entry="auto")
+        ids_m, _ = plain.search_batch(q, 10, L=32, w=4, entry="medoid")
+        np.testing.assert_array_equal(ids_p, ids_m)       # auto -> medoid
+        with pytest.raises(ValueError, match="navigation tier"):
+            plain.search_batch(q, 10, L=32, w=4, entry="nav")
+        with pytest.raises(ValueError, match="entry"):
+            idx.search_batch(q, 10, L=32, w=4, entry="bogus")
+    finally:
+        idx.close()
+        plain.close()
+
+
+# ---------------------------------------------------------------------------
+# sidecar compatibility + corruption
+# ---------------------------------------------------------------------------
+
+
+def test_pre_nav_dir_loads_disabled(index_dirs, small_corpus):
+    """A dir written without nav (same layout as a v1/v2 dir: no ``nav``
+    meta key, no sidecar) loads cleanly, serves, and reports no tier."""
+    base, q, _ = small_corpus
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # no warning on clean dirs
+        idx = HostIndex.load(index_dirs["aisaq"])
+    try:
+        assert idx.nav is None
+        ids, _ = idx.search_batch(q, 10, L=32, w=4)
+        assert ids.shape == (len(q), 10)
+    finally:
+        idx.close()
+
+
+def _load_expect_disabled(path):
+    with pytest.warns(RuntimeWarning, match="navigation sidecar"):
+        idx = HostIndex.load(path)
+    try:
+        assert idx.nav is None
+        # auto falls back; explicit nav is a usage error
+        idx.search_batch(np.zeros((1, idx.meta["dim"]), np.float32),
+                         5, L=16, w=4, entry="auto")
+        with pytest.raises(ValueError):
+            idx.search_batch(np.zeros((1, idx.meta["dim"]), np.float32),
+                             5, L=16, w=4, entry="nav")
+    finally:
+        idx.close()
+
+
+@pytest.mark.parametrize("damage", ["missing", "truncated", "garbage",
+                                    "bad_ids", "meta_mismatch"])
+def test_sidecar_damage_degrades_not_fails(nav_dirs, tmp_path, damage,
+                                           small_corpus):
+    import shutil
+    src = nav_dirs[False]
+    p = str(tmp_path / f"dmg_{damage}")
+    shutil.copytree(src, p)
+    side = os.path.join(p, navmod.NAV_SIDECAR)
+    if damage == "missing":
+        os.remove(side)
+    elif damage == "truncated":
+        blob = open(side, "rb").read()
+        open(side, "wb").write(blob[:len(blob) // 2])
+    elif damage == "garbage":
+        open(side, "wb").write(b"\x00" * 128)
+    elif damage == "bad_ids":
+        with np.load(side) as z:
+            arrs = dict(z)
+        arrs["pivot_ids"] = arrs["pivot_ids"] + 10 ** 9   # out of range
+        with open(side, "wb") as f:
+            np.savez(f, **arrs)
+    elif damage == "meta_mismatch":
+        mp = os.path.join(p, "meta.json")
+        meta = json.load(open(mp))
+        meta["nav"]["pivots"] = meta["nav"]["pivots"] + 1
+        json.dump(meta, open(mp, "w"))
+    _load_expect_disabled(p)
+
+
+def test_core_damage_still_raises(nav_dirs, tmp_path):
+    """Nav tolerance must NOT soften core-index integrity: damaging
+    meta.json still raises CorruptIndexError."""
+    import shutil
+    from repro.core.integrity import CorruptIndexError
+    p = str(tmp_path / "core_dmg")
+    shutil.copytree(nav_dirs[False], p)
+    open(os.path.join(p, "meta.json"), "w").write("{not json")
+    with pytest.raises(CorruptIndexError):
+        HostIndex.load(p)
+
+
+# ---------------------------------------------------------------------------
+# budget accounting
+# ---------------------------------------------------------------------------
+
+
+def test_nav_bytes_charged(nav_dirs):
+    idx = HostIndex.load(nav_dirs[False])
+    plain = HostIndex.load(nav_dirs["plain"])
+    try:
+        assert idx.resident_bytes() \
+            == plain.resident_bytes() + idx.nav.resident_nbytes()
+    finally:
+        idx.close()
+        plain.close()
+
+
+def test_pool_charges_and_reports_nav(nav_dirs):
+    from repro.serving.pool import WarmIndexPool
+    pool = WarmIndexPool({"navc": nav_dirs[False],
+                          "plain": nav_dirs["plain"]},
+                         cache_bytes=128 << 10)
+    try:
+        with pool.lease("navc") as (idx, _):
+            nav_nb = idx.nav.resident_nbytes()
+            assert pool.entry_bytes("navc") \
+                >= idx.resident_bytes()          # nav included in charge
+        with pool.lease("plain"):
+            pass
+        st = pool.stats()
+        assert st["nav_bytes"] == {"navc": nav_nb}
+        assert st["nav_bytes_total"] == nav_nb
+        assert st["used_bytes"] >= nav_nb
+    finally:
+        pool.close()
+
+
+def test_service_reports_hop_percentiles(nav_dirs, small_corpus):
+    from repro.serving.pool import WarmIndexPool
+    from repro.serving.service import RetrievalService
+    base, q, _ = small_corpus
+    pool = WarmIndexPool({"navc": nav_dirs[False]}, cache_bytes=128 << 10)
+    svc = RetrievalService(pool, num_workers=1, max_batch=8,
+                           max_wait_ms=1.0, L=32, entry="auto")
+    try:
+        rs = [svc.submit(q[i % len(q)], corpus="navc", k=5)
+              for i in range(8)]
+        for r in rs:
+            r.event.wait(10.0)
+            assert r.error is None
+        st = svc.stats()["corpora"]["navc"]
+        assert st["hops_p50"] > 0
+        assert st["hops_p99"] >= st["hops_p50"]
+        assert st["convergence_hops_p50"] > 0
+        reg = svc.stats()["registry"]
+        assert reg["traversal_hops"]["series"][0]["count"] >= 8
+        assert reg["nav_beam_hops"]["series"][0]["count"] >= 8
+    finally:
+        svc.stop()
+        pool.close()

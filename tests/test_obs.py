@@ -433,7 +433,7 @@ def test_service_stats_expose_registry_snapshot(index_dirs):
         lat = reg["service_latency_seconds"]["series"][0]
         assert lat["count"] == 1 and lat["p50"] is not None
         # the search-path distributions reached the same registry
-        assert reg["search_hops"]["series"][0]["count"] >= 1
+        assert reg["traversal_hops"]["series"][0]["count"] >= 1
         assert reg["search_batch_latency_seconds"]["series"][0]["count"] == 1
     finally:
         svc.close()
